@@ -1,0 +1,69 @@
+"""Benchmark substrate: each (graph × algorithm) job runs in a SUBPROCESS so
+we can report the paper's two metrics faithfully — ET (wall seconds) and VM
+(peak RSS via getrusage) — and enforce the paper's timeout semantics (grey
+bars in Figs 10-13). The subprocess also pins the XLA host device count for
+the core-scaling figure (an XLA CPU device executes on its own threads)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+WORKER = textwrap.dedent(
+    """
+    import json, os, resource, sys, time
+    spec = json.loads(sys.argv[1])
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={spec.get('devices', 1)}"
+    import numpy as np
+    from repro.graphs.datasets import load
+    from repro.core.triangle_pipeline import count_triangles, count_triangles_ring
+    from repro.core.triangle_mapreduce import count_triangles_mapreduce
+
+    g = load(spec["graph"], scale=spec.get("scale", 1.0), seed=0)
+    t0 = time.time()
+    method = spec["method"]
+    if method == "pipeline":
+        # adaptive path choice — dense for small n, sparse for big sparse
+        # graphs (the dynamic pipeline's input adaptation)
+        if g.n_nodes <= 6000:
+            count = count_triangles(g, method="dense")
+        else:
+            count = count_triangles(g, method="sparse")
+    elif method == "pipeline_ring":
+        from repro.launch.mesh import make_ring_mesh
+        mesh = make_ring_mesh(spec.get("devices", 1))
+        count = count_triangles_ring(g, mesh=mesh)
+    elif method == "mapreduce":
+        count = count_triangles_mapreduce(g, streaming=spec.get("streaming", True))
+    else:
+        raise ValueError(method)
+    wall = time.time() - t0
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    print("RESULT " + json.dumps({
+        "count": int(count), "wall_s": wall, "maxrss_mb": rss_mb,
+        "n": g.n_nodes, "m": g.n_edges, "density": g.density,
+    }))
+    """
+)
+
+
+def run_job(spec: dict, timeout_s: float = 120.0) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    try:
+        r = subprocess.run(
+            [sys.executable, "-c", WORKER, json.dumps(spec)],
+            env=env, capture_output=True, text=True, timeout=timeout_s,
+        )
+    except subprocess.TimeoutExpired:
+        return {"timeout": True, "timeout_s": timeout_s}
+    if r.returncode != 0:
+        return {"error": r.stderr[-1000:]}
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    return {"error": "no result line"}

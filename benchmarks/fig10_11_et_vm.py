@@ -1,0 +1,45 @@
+"""Figures 10 & 11: execution time + virtual memory, Pipeline vs MapReduce,
+over the Table-1 graph benchmark (CPU-scaled, structure-preserving; the
+paper's 5-hour timeout becomes a proportional per-job timeout)."""
+from __future__ import annotations
+
+from benchmarks.common import run_job
+
+# (graph, scale) — scales keep every family's structure while bounding the
+# single-core CPU budget; DSJC and FB107 run at FULL paper size.
+SUITE = [
+    ("DSJC.1", 1.0),
+    ("DSJC.5", 1.0),
+    ("DSJC.9", 1.0),
+    ("FNA.1", 0.2),
+    ("FNA.5", 0.2),
+    ("FNA.9", 0.2),
+    ("NY", 0.1),
+    ("FB107", 1.0),
+]
+
+
+def run(timeout_s: float = 150.0, verbose: bool = True) -> list[dict]:
+    rows = []
+    for name, scale in SUITE:
+        for method in ("pipeline", "mapreduce"):
+            res = run_job({"graph": name, "scale": scale, "method": method},
+                          timeout_s=timeout_s)
+            row = {"graph": name, "scale": scale, "method": method, **res}
+            rows.append(row)
+            if verbose:
+                if res.get("timeout"):
+                    print(f"  {name:8s} {method:10s}  TIMEOUT (> {timeout_s:.0f}s)")
+                elif "error" in res:
+                    print(f"  {name:8s} {method:10s}  ERROR {res['error'][:100]}")
+                else:
+                    print(f"  {name:8s} {method:10s}  ET {res['wall_s']:8.2f}s  "
+                          f"VM {res['maxrss_mb']:7.0f}MB  Δ={res['count']}")
+    # cross-check: both methods agree wherever both finished
+    by_graph = {}
+    for r in rows:
+        if "count" in r:
+            by_graph.setdefault(r["graph"], set()).add(r["count"])
+    for gname, counts in by_graph.items():
+        assert len(counts) == 1, f"count mismatch on {gname}: {counts}"
+    return rows

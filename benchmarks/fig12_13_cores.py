@@ -1,0 +1,30 @@
+"""Figures 12 & 13: impact of the number of cores. Each XLA host device runs
+on its own threads, so varying --xla_force_host_platform_device_count in the
+worker subprocess is a REAL core-scaling measurement of the ring pipeline;
+MapReduce scaling is measured through its node-batch parallel structure
+(XLA intra-op threads)."""
+from __future__ import annotations
+
+from benchmarks.common import run_job
+
+SUITE = [("DSJC.5", 1.0), ("DSJC.9", 1.0), ("FB107", 1.0)]
+DEVICES = [1, 2, 4]
+
+
+def run(timeout_s: float = 300.0, verbose: bool = True) -> list[dict]:
+    rows = []
+    for name, scale in SUITE:
+        for dev in DEVICES:
+            res = run_job({"graph": name, "scale": scale, "method": "pipeline_ring",
+                           "devices": dev}, timeout_s=timeout_s)
+            rows.append({"graph": name, "devices": dev, "method": "pipeline_ring", **res})
+            if verbose and "wall_s" in res:
+                print(f"  {name:8s} ring x{dev}  ET {res['wall_s']:7.2f}s")
+            elif verbose:
+                print(f"  {name:8s} ring x{dev}  {res}")
+        res = run_job({"graph": name, "scale": scale, "method": "mapreduce"},
+                      timeout_s=timeout_s)
+        rows.append({"graph": name, "devices": 1, "method": "mapreduce", **res})
+        if verbose and "wall_s" in res:
+            print(f"  {name:8s} mapreduce  ET {res['wall_s']:7.2f}s")
+    return rows

@@ -1,0 +1,51 @@
+"""Micro-benchmarks of the counting paths (µs/call on this host's CPU).
+
+The Pallas kernels are TPU-target; their interpret-mode timings are not
+meaningful, so this table times the XLA paths the kernels replace 1:1 and
+records the kernels' block geometry for the roofline discussion."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.triangle_mapreduce import build_mapreduce_operands, _mapreduce_count
+from repro.core.triangle_pipeline import count_triangles_dense, count_triangles_sparse
+from repro.graphs.formats import degree_order, forward_adjacency_dense, forward_adjacency_padded
+from repro.graphs import generators as gen
+
+
+def _time(fn, *args, reps=1):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # µs
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for n, p in [(512, 0.3), (1024, 0.5)]:
+        g = gen.gnp(n, p, seed=n)
+        u = jnp.asarray(forward_adjacency_dense(g))
+        us_dense = _time(lambda u=u: count_triangles_dense(u))
+        rank = degree_order(g)
+        nbrs, _ = forward_adjacency_padded(g, rank)
+        ru, rv = rank[g.edges[:, 0]], rank[g.edges[:, 1]]
+        edges = jnp.asarray(np.stack([np.minimum(ru, rv), np.maximum(ru, rv)], 1))
+        us_sparse = _time(lambda: count_triangles_sparse(jnp.asarray(nbrs), edges))
+        mr_nbrs, mr_keys, _ = build_mapreduce_operands(g)
+        us_mr = _time(lambda: _mapreduce_count(jnp.asarray(mr_nbrs), jnp.asarray(mr_keys),
+                                               n=n, node_batch=256))
+        rows.append({"name": f"tri_dense_n{n}_p{p}", "us_per_call": us_dense,
+                     "derived": f"m={g.n_edges}"})
+        rows.append({"name": f"tri_sparse_n{n}_p{p}", "us_per_call": us_sparse,
+                     "derived": f"m={g.n_edges}"})
+        rows.append({"name": f"tri_mapreduce_n{n}_p{p}", "us_per_call": us_mr,
+                     "derived": f"rf~{int((g.degrees()**2).sum())}"})
+        if verbose:
+            print(f"  n={n} p={p}: dense {us_dense/1e3:8.1f}ms  sparse {us_sparse/1e3:8.1f}ms  "
+                  f"mapreduce {us_mr/1e3:8.1f}ms")
+    return rows

@@ -1,0 +1,68 @@
+"""§Roofline table builder: reads results/dryrun/<mesh>/*.json and prints the
+three-term roofline per (arch × shape × mesh) plus the MODEL_FLOPS ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.shapes import shapes_for
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(arch: str, shape) -> float | None:
+    """6·N·D (dense) / 6·N_active·D (MoE) for LM training; None otherwise."""
+    if arch.startswith(("deepseek", "granite", "nemotron", "yi")):
+        cfg = get_config(arch)
+        n = cfg.n_active_params() if cfg.moe else cfg.n_params()
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            return 6.0 * n * tokens
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            return 2.0 * n * tokens
+        if shape.kind == "decode":
+            return 2.0 * n * shape.global_batch
+    return None
+
+
+def load_rows(mesh_name: str = "pod_16x16") -> list[dict]:
+    rows = []
+    d = os.path.join(RESULTS, mesh_name)
+    if not os.path.isdir(d):
+        return rows
+    for fn in sorted(os.listdir(d)):
+        with open(os.path.join(d, fn)) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def print_table(mesh_name: str = "pod_16x16") -> list[dict]:
+    rows = load_rows(mesh_name)
+    out = []
+    print(f"\n== Roofline ({mesh_name}) ==")
+    hdr = (f"{'arch':24s} {'shape':14s} {'ok':3s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dominant':>10s} {'ana_c_s':>10s} {'roofl%':>7s} {'GiB/dev':>8s}")
+    print(hdr)
+    for r in rows:
+        if not r.get("ok"):
+            print(f"{r['arch']:24s} {r['shape']:14s} FAIL  {r.get('error', '')[:60]}")
+            out.append(r)
+            continue
+        rl = r["roofline"]
+        ana = r.get("analytic")
+        ana_c = ana["compute_s"] if ana else None
+        # roofline fraction: analytic useful compute vs the binding term
+        frac = ""
+        if ana_c is not None:
+            bound = max(ana_c, ana.get("memory_s", 0.0), rl["collective_s"], rl["memory_s"])
+            frac = f"{100.0 * ana_c / max(bound, 1e-30):.0f}%"
+            r["roofline_fraction_pct"] = 100.0 * ana_c / max(bound, 1e-30)
+        mem = r["memory"]["peak_bytes_per_device"] / 2**30
+        ana_str = f"{ana_c:10.3e}" if ana_c is not None else " " * 10
+        print(f"{r['arch']:24s} {r['shape']:14s} ok  {rl['compute_s']:10.3e} "
+              f"{rl['memory_s']:10.3e} {rl['collective_s']:10.3e} {rl['dominant']:>10s} "
+              f"{ana_str} {frac:>7s} {mem:8.2f}")
+        out.append(r)
+    return out

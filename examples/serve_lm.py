@@ -1,0 +1,30 @@
+"""Serving example: prefill a batch of prompts, then decode new tokens with
+the KV cache (GQA) — the serve_step the decode_* dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models.transformer import decode_step, init_params, prefill
+
+cfg = get_smoke("granite_8b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+batch, prompt_len, s_max, new_tokens = 4, 24, 64, 16
+prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)
+
+logits, cache = prefill(params, cfg, prompts, s_max, chunk_q=16)
+step = jax.jit(lambda c, t, n: decode_step(params, cfg, c, t, n))
+
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+out = [tok]
+for i in range(new_tokens):
+    logits, cache = step(cache, tok, jnp.int32(prompt_len + i))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out.append(tok)
+
+gen = jnp.concatenate(out, axis=1)
+print(f"prefilled {batch}×{prompt_len}, decoded {new_tokens} tokens each")
+print("generated token ids:\n", gen)

@@ -1,0 +1,3 @@
+"""repro: dynamic-pipeline vs MapReduce triangle counting as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

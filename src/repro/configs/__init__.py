@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch)`` returns the full published config; ``get_smoke(arch)``
+returns the reduced same-family config used by CPU smoke tests. Shapes live
+in ``repro.configs.shapes``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_v2_lite_16b",
+    "deepseek_v2_236b",
+    "granite_8b",
+    "nemotron_4_15b",
+    "yi_6b",
+    "mace",
+    "dimenet",
+    "graphcast",
+    "gin_tu",
+    "autoint",
+    # the paper's own workload
+    "triangle",
+]
+
+
+def _mod(arch: str):
+    return importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+
+
+def get_config(arch: str):
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str):
+    return _mod(arch).smoke_config()

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- triangle_count: blocked sum((A@B) * M) -- the paper's counting phase on the
+  MXU (DESIGN.md §2). This is the kernel the dense dynamic-pipeline ring calls
+  per streamed block.
+- flash_attention: causal fused attention for the LM architectures.
+- embedding_bag: gather + segment-reduce for the recsys embedding hot path.
+
+Each kernel ships ops.py (jit'd wrapper; ``interpret=None`` auto-selects
+interpret mode off-TPU) and ref.py (pure-jnp oracle used by the allclose
+sweeps in tests/).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bitset_count.ops import bitset_edge_count

@@ -1,0 +1,19 @@
+"""Public wrapper for the bitset edge-closure kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset_count.bitset_count import bitset_edge_count_kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitset_edge_count(masks: jax.Array, edges: jax.Array, *,
+                      interpret: bool | None = None) -> jax.Array:
+    """Σ_e popcount(masks[u_e] & masks[v_e]) — the bitset ring's per-stage
+    counting step. masks: (n_pad, W) uint32; edges: (B, 2) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return bitset_edge_count_kernel(masks, edges.astype(jnp.int32), interpret=interpret)

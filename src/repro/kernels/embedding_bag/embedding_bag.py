@@ -1,0 +1,51 @@
+"""EmbeddingBag (sum) Pallas kernel with scalar-prefetched gather.
+
+The bag indices are a scalar-prefetch operand, so the BlockSpec index_map of
+the *table* input is data-dependent: grid step (b, l) DMAs exactly the table
+row indices[b, l] from HBM into VMEM — the TPU rendering of EmbeddingBag's
+row-granular gather (no (B, L, D) expansion is ever materialized, unlike the
+jnp.take reference). Sentinel indices (>= V) fetch row 0 but are masked out
+of the accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, table_ref, out_ref, *, n_l: int, vocab: int):
+    b, l = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(idx_ref[b, l] < vocab)
+    def _acc():
+        out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+
+def embedding_bag_kernel(
+    table: jax.Array, indices: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """table: (V, D); indices: (B, L). Returns (B, D) f32 bag sums."""
+    v, d = table.shape
+    b, n_l = indices.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_l),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda ib, il, idx: (jnp.minimum(idx[ib, il], v - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda ib, il, idx: (ib, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_l=n_l, vocab=v),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(indices, table)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for EmbeddingBag (sum mode).
+
+JAX has no native EmbeddingBag: the reference composes jnp.take +
+masked sum, which is also the general-XLA fallback the models use.
+"""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, D); indices: (B, L) int32, sentinel >= V means padding.
+    Returns (B, D) sum of looked-up rows."""
+    v = table.shape[0]
+    safe = jnp.minimum(indices, v - 1)
+    rows = jnp.take(table, safe, axis=0)  # (B, L, D)
+    mask = (indices < v)[..., None]
+    return jnp.sum(rows * mask, axis=1, dtype=jnp.float32).astype(table.dtype)

@@ -1,0 +1,100 @@
+"""Causal GQA flash attention (Pallas, TPU target).
+
+Online-softmax over KV blocks with VMEM-resident running (m, l, acc) scratch;
+the KV grid axis is innermost so scratch persists across a query block's KV
+sweep. Causal block skip: KV blocks strictly above the diagonal do no MXU
+work. GQA is handled in the BlockSpec index maps (kv head = q head // group),
+so no repeated KV materialization — the kernel reads each KV block once per
+query-head group member but never expands it in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, block_q: int,
+            block_k: int, n_k: int, causal: bool):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: KV block is live unless it starts after this q block's last row
+    if causal:
+        live = ik * block_k <= iq * block_q + block_q - 1
+    else:
+        live = ik >= 0
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). S must divide by both blocks."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    grid = (b, hq, s // block_q, s // block_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, block_q=block_q, block_k=block_k, n_k=grid[3], causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

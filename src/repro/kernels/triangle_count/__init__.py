@@ -1,0 +1,1 @@
+from repro.kernels.triangle_count.ops import masked_matmul_sum, triangle_count

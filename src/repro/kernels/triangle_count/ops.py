@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the triangle-count kernel (pads + dispatches)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.triangle_count.triangle_count import masked_matmul_sum_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    pm = (-x.shape[0]) % bm
+    pn = (-x.shape[1]) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "upper_triangular", "interpret"))
+def masked_matmul_sum(
+    a: jax.Array,
+    b: jax.Array,
+    m: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    upper_triangular: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """sum((A @ B) ⊙ M). Pads to block multiples (zero pad is count-neutral)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    a = _pad2(a, block_m, block_k)
+    b = _pad2(b, block_k, block_n)
+    m = _pad2(m, block_m, block_n)
+    return masked_matmul_sum_kernel(
+        a,
+        b,
+        m,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        upper_triangular=upper_triangular,
+        interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def triangle_count(u: jax.Array, *, block: int = 128, interpret: bool | None = None) -> jax.Array:
+    """sum(U ⊙ (U@U)) for strictly-upper-triangular U, with the structural
+    block skip (j ≥ i, i ≤ k ≤ j) enabled."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    u = _pad2(u, block, block)
+    out = masked_matmul_sum_kernel(
+        u, u, u, block_m=block, block_n=block, block_k=block,
+        upper_triangular=True, interpret=interpret,
+    )
+    from repro.utils import count_dtype
+
+    return out.astype(count_dtype())

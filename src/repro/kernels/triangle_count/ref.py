@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the triangle-count kernel."""
+import jax.numpy as jnp
+
+
+def masked_matmul_sum_ref(a: jnp.ndarray, b: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """sum((A @ B) ⊙ M), accumulated in f32."""
+    prod = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return jnp.sum(prod * m.astype(jnp.float32), dtype=jnp.float32)
+
+
+def triangle_count_ref(u: jnp.ndarray) -> jnp.ndarray:
+    """sum(U ⊙ (U @ U)) for strictly-upper-triangular 0/1 U."""
+    return masked_matmul_sum_ref(u, u, u)

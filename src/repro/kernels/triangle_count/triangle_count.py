@@ -1,0 +1,93 @@
+"""Blocked masked-matmul-reduce Pallas kernel: sum((A @ B) ⊙ M).
+
+This is the counting phase of the dynamic pipeline on the MXU. A is (R, K),
+B is (K, N), M is (R, N); all blocks are VMEM-resident tiles, the contraction
+accumulates into an f32 VMEM scratch, and the masked reduction folds into a
+single (1, 1) output block that stays resident across the whole grid.
+
+Grid = (R/bm, N/bn, K/bk), k fastest-varying (Pallas iterates the last grid
+axis innermost) so the accumulator pattern is the canonical matmul one.
+
+``upper_triangular=True`` enables the structural skip for the single-matrix
+triangle count U@U⊙U: the M block (i, j) is all-zero when j < i, and the
+k-th contraction slice is all-zero unless i ≤ k ≤ j (U is strictly upper
+triangular: U[i,k] needs k > i-block-start, U[k,j] needs k < j-block-end).
+Skipped blocks cost a VMEM fetch but no MXU work (`pl.when`), cutting MXU
+occupancy of redundant blocks by ~6x on large n — the paper's "useful work"
+fraction (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, m_ref, out_ref, acc_ref, *, n_k: int, upper_triangular: bool):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if upper_triangular:
+        live = (j >= i) & (k >= i) & (k <= j)
+    else:
+        live = (i >= 0)  # always true, keeps a traced bool
+
+    @pl.when(live)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == n_k - 1)
+    def _reduce():
+        # per-block sum is exact in f32 (≤ block_m·block_n·block_k < 2^24);
+        # the RUNNING total accumulates in int32 — f32 accumulation loses
+        # exactness past 2^24 total
+        blk = jnp.sum(acc_ref[...] * m_ref[...].astype(jnp.float32))
+        out_ref[0, 0] += blk.astype(jnp.int32)
+
+
+def masked_matmul_sum_kernel(
+    a: jax.Array,
+    b: jax.Array,
+    m: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    upper_triangular: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """sum((A @ B) ⊙ M) with (R, K) @ (K, N) against mask (R, N).
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    R, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and m.shape == (R, N), (a.shape, b.shape, m.shape)
+    grid = (R // block_m, N // block_n, K // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2], upper_triangular=upper_triangular),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b, m)
+    return out[0, 0]

@@ -1,0 +1,179 @@
+"""Sharding rules: PartitionSpec pytrees per architecture family.
+
+Mesh axes: ('pod', 'data', 'model') multi-pod, ('data', 'model') single-pod.
+``dp`` below = all batch axes (pod+data). The LM layout is FSDP + TP + EP:
+
+- tensor parallel over 'model' (attention heads / ffn columns / experts /
+  vocab), FSDP over 'data' on the non-TP weight dim — optimizer state
+  inherits, so AdamW moments are fully sharded (ZeRO-3 equivalent);
+- activations: batch over dp; KV caches shard their SEQUENCE dim over
+  'model' (decode becomes split-K flash-decoding, summing partial softmax
+  via XLA's reduction collectives);
+- recsys tables row-shard the vocab over 'model' (responsible-key divide);
+- GNN node/edge arrays shard over the flattened mesh ring (the DP runtime's
+  stage axis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _lm_trailing_spec(name: str, ndim: int, dp) -> tuple:
+    """Spec for the TRAILING (per-layer) dims of an LM weight by name."""
+    mdl = "model"
+    table = {
+        # (spec for trailing dims)
+        "embed": (mdl, dp),
+        "unembed": (dp, mdl),
+        "final_norm": (None,),
+        "ln1": (None,),
+        "ln2": (None,),
+        "q_norm": (None,),
+        "kv_norm": (None,),
+        "wq": (dp, mdl),
+        "w_q": (dp, mdl),
+        "wk": (dp, mdl),
+        "wv": (dp, mdl),
+        "wo": (mdl, dp),
+        "w_dq": (dp, None),
+        "w_uq": (None, mdl),
+        "w_dkv": (dp, None),
+        "w_kr": (dp, None),
+        "w_uk": (None, mdl),
+        "w_uv": (None, mdl),
+        "router": (dp, None),
+        "eps": (),
+    }
+    if name in table:
+        return table[name]
+    if name in ("w_gate", "w_up", "w_in"):
+        return (mdl, dp, None) if ndim >= 3 else (dp, mdl)  # expert (E,D,F) vs dense (D,F)
+    if name in ("w_down", "w_out"):
+        return (mdl, None, dp) if ndim >= 3 else (mdl, dp)
+    return tuple([None] * ndim)
+
+
+def lm_param_specs(shapes: Any, mesh: Mesh) -> Any:
+    """Build a PartitionSpec pytree matching an eval_shape of init_params."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def spec_of(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        stacked = any(k in ("dense", "moe_stack") for k in keys)
+        trailing_ndim = leaf.ndim - (1 if stacked else 0)
+        trailing = _lm_trailing_spec(name, trailing_ndim, dp)
+        trailing = tuple(trailing[:trailing_ndim]) if trailing else ()
+        # weights smaller than the mesh axes (norm vectors) stay replicated
+        spec = ((None,) if stacked else ()) + trailing
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def lm_batch_specs(mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_specs(shapes: Any, mesh: Mesh) -> Any:
+    """Cache pytree: shard batch over dp (when divisible) and the sequence dim
+    over 'model' (split-K flash-decoding). GQA leaves are (L, B, Hk, S, hd);
+    MLA (L, B, S, r). batch=1 long-context cells replicate the batch dim."""
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def spec_of(path, leaf):
+        b = leaf.shape[1]
+        bspec = dp if b % dp_total == 0 else None
+        if leaf.ndim == 5:  # (L, B, Hk, S, hd)
+            return P(None, bspec, None, "model", None)
+        if leaf.ndim == 4:  # (L, B, S, r)
+            return P(None, bspec, "model", None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def opt_state_specs(param_specs: Any) -> dict:
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys
+# ---------------------------------------------------------------------------
+def gnn_batch_specs(batch_shapes: dict, mesh: Mesh) -> dict:
+    """Node arrays shard over dp; edge/triplet arrays over the full flat mesh.
+    Arrays whose leading dim doesn't divide the axis size stay replicated
+    (e.g. the (1,) energy target)."""
+    all_ax = tuple(mesh.axis_names)
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    all_total = mesh.devices.size
+    dp = dp if len(dp) > 1 else dp[0]
+    out = {}
+    for k, v in batch_shapes.items():
+        if k in ("edges", "triplets"):
+            first = all_ax if v.shape[0] % all_total == 0 else None
+            out[k] = P(first, None)
+        elif k in ("x", "pos", "z", "target", "labels", "graph_ids"):
+            first = dp if v.shape[0] % dp_total == 0 else None
+            out[k] = P(*((first,) + (None,) * (v.ndim - 1)))
+        elif k == "blocks":
+            out[k] = jax.tree.map(
+                lambda s: P(*(((all_ax if s.shape[0] % all_total == 0 else None),)
+                              + (None,) * (s.ndim - 1))), v)
+        else:
+            out[k] = P()
+    return out
+
+
+def gnn_param_specs(shapes: Any, mesh: Mesh) -> Any:
+    """GNN weights are small (≤ ~512²): replicate everything but the widest
+    MLPs, which shard their column dim over 'model'."""
+    def spec_of(path, leaf):
+        if leaf.ndim == 2 and leaf.shape[0] >= 256 and leaf.shape[1] >= 256:
+            return P(None, "model")
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def recsys_param_specs(shapes: Any, mesh: Mesh) -> Any:
+    def spec_of(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if keys[-1] == "table":
+            return P("model", None)  # row-sharded vocab
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def recsys_batch_specs(mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    return {"sparse_ids": P(dp, None), "labels": P(dp)}
+
+
+def shardings_from_specs(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

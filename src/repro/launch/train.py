@@ -1,0 +1,74 @@
+"""Training driver: end-to-end loop with checkpointing and exact restart.
+
+CPU-scale by default (smoke config unless --full). Example:
+  PYTHONPATH=src python -m repro.launch.train --arch yi_6b --steps 20 \
+      --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import LMTokenPipeline
+from repro.models import transformer as tf
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.steps import make_lm_train_step
+
+
+def train_lm(arch: str, *, steps: int = 20, batch: int = 8, seq: int = 64,
+             ckpt_dir: str | None = None, ckpt_every: int = 10, full: bool = False,
+             restore: bool = True, seed: int = 0, log_every: int = 5) -> dict:
+    cfg = get_config(arch) if full else get_smoke(arch)
+    pipe = LMTokenPipeline(cfg, batch, seq, seed=seed)
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init_state(params)
+    step_fn = jax.jit(make_lm_train_step(cfg, chunk_q=min(seq, 512), remat=False))
+
+    start = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr and restore and (latest := mgr.latest_step()) is not None:
+        state = mgr.restore(latest, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start = latest
+        print(f"restored step {latest} from {ckpt_dir}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = pipe.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_np)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step)")
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.save(steps, {"params": params, "opt": opt_state}, blocking=True)
+    return {"losses": losses, "params": params, "final_loss": losses[-1] if losses else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, full=args.full,
+                   seed=args.seed)
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

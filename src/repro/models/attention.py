@@ -1,0 +1,211 @@
+"""Attention variants: GQA (llama-family) and MLA (DeepSeek-V2).
+
+Each variant exposes:
+  *_init(key, cfg, dtype)                         -> params
+  *_full(p, cfg, x, cos, sin, use_flash)          -> y          (train/prefill)
+  *_cache_init(cfg, batch, s_max, dtype)          -> cache      (per layer)
+  *_prefill_cache(p, cfg, x, cos, sin, cache)     -> cache      (fill [0, S))
+  *_decode(p, cfg, x, cos, sin, cache, cur_len)   -> (y, cache) (one token)
+
+MLA decode runs **absorbed** in latent space (DeepSeek-V2 §2.1.3): the cache
+holds only (c_kv: rank 512, k_rope: 64) per position; W_uk is folded into the
+query and W_uv into the output, so decode FLOPs/bytes scale with the latent
+rank, not n_heads × head_dim — the technique's serving win, visible in the
+decode rooflines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.chunked_attention import chunked_attention, decode_attention
+from repro.models.layers import apply_rotary, rms_norm
+
+
+def _norm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def _rand(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+def gqa_init(key, cfg: LMConfig, dtype) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    return {
+        "wq": _rand(ks[0], (d, h * hd), s, dtype),
+        "wk": _rand(ks[1], (d, hk * hd), s, dtype),
+        "wv": _rand(ks[2], (d, hk * hd), s, dtype),
+        "wo": _rand(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)  # (B, H, S, hd)
+
+
+def gqa_full(p, cfg: LMConfig, x, cos, sin, *, use_flash: bool = False, chunk_q: int = 1024):
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _split_heads(x @ p["wq"], h, hd)
+    k = _split_heads(x @ p["wk"], hk, hd)
+    v = _split_heads(x @ p["wv"], hk, hd)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    if use_flash:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        o = chunked_attention(q, k, v, causal=True, chunk_q=chunk_q)
+    b, s = x.shape[:2]
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * hd) @ p["wo"]
+
+
+def gqa_cache_init(cfg: LMConfig, batch: int, s_max: int, dtype):
+    hk, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, hk, s_max, hd), dtype),
+        "v": jnp.zeros((batch, hk, s_max, hd), dtype),
+    }
+
+
+def gqa_prefill_cache(p, cfg: LMConfig, x, cos, sin, cache):
+    hk, hd = cfg.n_kv_heads, cfg.hd
+    k = apply_rotary(_split_heads(x @ p["wk"], hk, hd), cos, sin)
+    v = _split_heads(x @ p["wv"], hk, hd)
+    s = x.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)
+    return cache
+
+
+def gqa_decode(p, cfg: LMConfig, x, cos, sin, cache, cur_len):
+    """x: (B, 1, D); cos/sin for position cur_len; returns (y (B,1,D), cache)."""
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    b = x.shape[0]
+    q = apply_rotary(_split_heads(x @ p["wq"], h, hd), cos, sin)[:, :, 0]  # (B,H,hd)
+    k = apply_rotary(_split_heads(x @ p["wk"], hk, hd), cos, sin)
+    v = _split_heads(x @ p["wv"], hk, hd)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur_len, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur_len, axis=2)
+    o = decode_attention(q, ck, cv, cur_len + 1)  # (B, H, hd)
+    y = o.reshape(b, 1, h * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2)
+# ===========================================================================
+def mla_init(key, cfg: LMConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = _rand(ks[0], (d, m.q_lora_rank), d**-0.5, dtype)
+        p["q_norm"] = _norm_init(m.q_lora_rank)
+        p["w_uq"] = _rand(ks[1], (m.q_lora_rank, h * (dn + dr)), m.q_lora_rank**-0.5, dtype)
+    else:
+        p["w_q"] = _rand(ks[0], (d, h * (dn + dr)), d**-0.5, dtype)
+    p["w_dkv"] = _rand(ks[2], (d, r), d**-0.5, dtype)
+    p["kv_norm"] = _norm_init(r)
+    p["w_kr"] = _rand(ks[3], (d, dr), d**-0.5, dtype)
+    p["w_uk"] = _rand(ks[4], (r, h * dn), r**-0.5, dtype)
+    p["w_uv"] = _rand(ks[5], (r, h * dv), r**-0.5, dtype)
+    p["wo"] = _rand(ks[6], (h * dv, d), (h * dv) ** -0.5, dtype)
+    return p
+
+
+def _mla_q(p, cfg, x, cos, sin):
+    m, h = cfg.mla, cfg.n_heads
+    dn, dr = m.nope_head_dim, m.rope_head_dim
+    if m.q_lora_rank:
+        cq = rms_norm(x @ p["w_dq"], p["q_norm"].astype(x.dtype), cfg.norm_eps)
+        q = cq @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rotary(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_full(p, cfg: LMConfig, x, cos, sin, *, use_flash: bool = False, chunk_q: int = 1024):
+    m, h = cfg.mla, cfg.n_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"].astype(x.dtype), cfg.norm_eps)  # (B,S,r)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn).transpose(0, 2, 1, 3)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv).transpose(0, 2, 1, 3)
+    k_rope = apply_rotary((x @ p["w_kr"])[:, None], cos, sin)  # (B,1,S,dr)
+    k_rope = jnp.broadcast_to(k_rope, (b, h, s, dr))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    scale = (dn + dr) ** -0.5
+    if use_flash:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        # pad v head dim up to qk dim so the kernel's uniform D applies
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        o = flash_attention(q, k, v_pad, causal=True)[..., :dv]
+    else:
+        o = chunked_attention(q, k, v, causal=True, chunk_q=chunk_q, scale=scale)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * dv) @ p["wo"]
+
+
+def mla_cache_init(cfg: LMConfig, batch: int, s_max: int, dtype):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, s_max, m.rope_head_dim), dtype),
+    }
+
+
+def mla_prefill_cache(p, cfg: LMConfig, x, cos, sin, cache):
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"].astype(x.dtype), cfg.norm_eps)
+    k_rope = apply_rotary((x @ p["w_kr"])[:, None], cos, sin)[:, 0]  # (B,S,dr)
+    cache = dict(cache)
+    cache["c"] = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv.astype(cache["c"].dtype), 0, axis=1)
+    cache["kr"] = jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope.astype(cache["kr"].dtype), 0, axis=1)
+    return cache
+
+
+def mla_decode(p, cfg: LMConfig, x, cos, sin, cache, cur_len):
+    """Absorbed latent-space decode. x: (B, 1, D)."""
+    m, h = cfg.mla, cfg.n_heads
+    dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)  # (B,H,1,dn), (B,H,1,dr)
+    q_nope, q_rope = q_nope[:, :, 0], q_rope[:, :, 0]
+    # new cache entries
+    c_new = rms_norm(x @ p["w_dkv"], p["kv_norm"].astype(x.dtype), cfg.norm_eps)  # (B,1,r)
+    kr_new = apply_rotary((x @ p["w_kr"])[:, None], cos, sin)[:, 0]  # (B,1,dr)
+    c = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new.astype(cache["c"].dtype), cur_len, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), cur_len, axis=1)
+    # absorb W_uk into q: q_eff (B,H,r)
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)
+    logits = (
+        jnp.einsum("bhr,bsr->bhs", q_eff, c, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,bsd->bhs", q_rope, kr, preferred_element_type=jnp.float32)
+    ) * ((dn + dr) ** -0.5)
+    s_max = c.shape[1]
+    mask = jnp.arange(s_max)[None, None, :] < cur_len + 1
+    prob = jax.nn.softmax(jnp.where(mask, logits, -1e30), axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", prob.astype(c.dtype), c)  # (B,H,r)
+    # absorb W_uv into output
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * dv)
+    y = o.astype(x.dtype) @ p["wo"]
+    return y, {"c": c, "kr": kr}

@@ -1,0 +1,73 @@
+"""Shared GNN substrate: segment-op message passing over padded edge lists.
+
+JAX is BCOO-only for sparse, so message passing is built on
+``jax.ops.segment_sum``/``segment_max`` over an explicit edge-index →
+node-scatter — this IS the system's SpMM layer (kernel_taxonomy §GNN).
+Edges are padded to a static length with src=dst=n_nodes (a phantom node
+whose messages are dropped), so every step compiles once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_edges(edges: np.ndarray, n_edges_pad: int, n_nodes: int) -> np.ndarray:
+    """(E, 2) → (n_edges_pad, 2) padded with the phantom node id n_nodes."""
+    e = np.full((n_edges_pad, 2), n_nodes, dtype=np.int32)
+    e[: len(edges)] = edges
+    return e
+
+
+def bidirect(edges: np.ndarray) -> np.ndarray:
+    return np.concatenate([edges, edges[:, ::-1]], axis=0)
+
+
+def aggregate(messages: jax.Array, dst: jax.Array, n_nodes: int, aggregator: str = "sum") -> jax.Array:
+    """messages: (E, d); dst: (E,) int32 (phantom = n_nodes). → (n_nodes, d)."""
+    if aggregator == "sum":
+        out = jax.ops.segment_sum(messages, dst, num_segments=n_nodes + 1)
+    elif aggregator == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=n_nodes + 1)
+        c = jax.ops.segment_sum(jnp.ones((messages.shape[0], 1), messages.dtype), dst,
+                                num_segments=n_nodes + 1)
+        out = s / jnp.maximum(c, 1)
+    elif aggregator == "max":
+        out = jax.ops.segment_max(messages, dst, num_segments=n_nodes + 1,
+                                  indices_are_sorted=False)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    else:
+        raise ValueError(aggregator)
+    return out[:n_nodes]  # drop phantom row
+
+
+def gather_src(x: jax.Array, src: jax.Array) -> jax.Array:
+    """x: (N, d); src: (E,) with phantom = N → zero rows for phantoms."""
+    n = x.shape[0]
+    safe = jnp.minimum(src, n - 1)
+    rows = jnp.take(x, safe, axis=0)
+    return rows * (src < n)[:, None].astype(x.dtype)
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": (jax.random.normal(ks[i], (dims[i], dims[i + 1])) * dims[i] ** -0.5).astype(dtype)
+        for i in range(len(dims) - 1)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)}
+
+
+def mlp_apply(p: dict, x: jax.Array, *, act=jax.nn.silu, final_act: bool = False) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x: jax.Array) -> jax.Array:
+    m = x.mean(-1, keepdims=True)
+    v = x.var(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6)

@@ -1,0 +1,168 @@
+"""DimeNet [arXiv:2003.03123]: directional message passing with radial-basis
+distances and spherical-basis (distance × angle) triplet features.
+
+Compact-faithful rendering: Bessel-style sine RBF with smooth envelope
+(n_radial=6), separable SBF (n_spherical=7 angular cosines × n_radial radial,
+exact Bessel zeros elided — noted in DESIGN.md), embedding block, n_blocks=6
+interaction blocks with the bilinear triplet layer (n_bilinear=8), per-block
+output MLPs summed into atom energies. The triplet gather (k→j→i) is the
+characteristic kernel regime — precomputed padded index lists, segment-sum
+scatter back to edges.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import common as C
+
+
+# --------------------------------------------------------------------------
+# basis functions
+# --------------------------------------------------------------------------
+def envelope(d: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """Smooth polynomial cutoff (DimeNet eq. 8)."""
+    x = d / cutoff
+    a = -(p + 1) * (p + 2) / 2
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2
+    env = 1.0 / jnp.maximum(x, 1e-9) + a * x ** (p - 1) + b * x**p + c * x ** (p + 1)
+    return jnp.where(x < 1.0, env, 0.0)
+
+
+def radial_basis(d: jax.Array, n_radial: int, cutoff: float) -> jax.Array:
+    """(..., ) → (..., n_radial) sine Bessel basis with envelope."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    x = d[..., None]
+    rbf = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * x / cutoff)
+    return rbf * envelope(d, cutoff)[..., None]
+
+
+def spherical_basis(d: jax.Array, angle: jax.Array, n_spherical: int, n_radial: int,
+                    cutoff: float) -> jax.Array:
+    """(T,) × (T,) → (T, n_spherical * n_radial) separable distance×angle basis."""
+    rbf = radial_basis(d, n_radial, cutoff)  # (T, n_radial)
+    ls = jnp.arange(n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(ls[None, :] * angle[:, None])  # (T, n_spherical)
+    return (ang[:, :, None] * rbf[:, None, :]).reshape(d.shape[0], n_spherical * n_radial)
+
+
+# --------------------------------------------------------------------------
+# triplet construction (host side, padded)
+# --------------------------------------------------------------------------
+def build_triplets(edges: np.ndarray, n_nodes: int, max_per_edge: int = 8) -> np.ndarray:
+    """edges: (E, 2) directed (src j → dst i). For each edge e=(j→i) collect up
+    to ``max_per_edge`` incoming edges k→j with k != i. Returns (E*max, 2)
+    int32 (edge_kj, edge_ji) padded with E (phantom edge)."""
+    E = len(edges)
+    by_dst: dict[int, list[int]] = {}
+    for idx, (s, t) in enumerate(edges):
+        by_dst.setdefault(int(t), []).append(idx)
+    out = np.full((E * max_per_edge, 2), E, dtype=np.int32)
+    w = 0
+    for e_ji, (j, i) in enumerate(edges):
+        cnt = 0
+        for e_kj in by_dst.get(int(j), []):
+            k = edges[e_kj][0]
+            if k == i or cnt >= max_per_edge:
+                continue
+            out[w] = (e_kj, e_ji)
+            w += 1
+            cnt += 1
+    return out
+
+
+def bilinear_apply(sb: jax.Array, w_bil: jax.Array, t_msg: jax.Array) -> jax.Array:
+    """Σ_b sb[..., b] · (t_msg @ w_bil[b]) — loop over the n_bilinear slots.
+
+    Equivalent to einsum('...tb,bde,...td->...te') but never materializes the
+    (T, d, e) contraction intermediate (126 GiB/device at ogb scale)."""
+    out = None
+    for b in range(w_bil.shape[0]):
+        term = sb[..., b : b + 1] * (t_msg @ w_bil[b])
+        out = term if out is None else out + term
+    return out
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+def init_params(key, cfg: GNNConfig, n_species: int = 16, dtype=jnp.float32) -> dict:
+    d = cfg.d_hidden
+    n_sbf = cfg.n_spherical * cfg.n_radial
+    ks = jax.random.split(key, 4 + 4 * cfg.n_layers)
+    blocks = []
+    for i in range(cfg.n_layers):
+        k1, k2, k3, k4 = jax.random.split(ks[4 + i], 4)
+        blocks.append(
+            {
+                "w_sbf": (jax.random.normal(k1, (n_sbf, cfg.n_bilinear)) * n_sbf**-0.5).astype(dtype),
+                "w_bil": (jax.random.normal(k2, (cfg.n_bilinear, d, d)) * d**-0.5).astype(dtype),
+                "mlp_src": C.mlp_init(k3, [d, d], dtype),
+                "mlp_out": C.mlp_init(k4, [d, d, d], dtype),
+                "out_rbf": C.mlp_init(jax.random.fold_in(k4, 1), [cfg.n_radial, d], dtype),
+                "out_mlp": C.mlp_init(jax.random.fold_in(k4, 2), [d, d, 1], dtype),
+            }
+        )
+    return {
+        "species": (jax.random.normal(ks[0], (n_species, d)) * 0.5).astype(dtype),
+        "rbf_proj": C.mlp_init(ks[1], [cfg.n_radial, d], dtype),
+        "embed_mlp": C.mlp_init(ks[2], [3 * d, d], dtype),
+        "blocks": blocks,
+    }
+
+
+def forward_energy(params: dict, cfg: GNNConfig, z: jax.Array, pos: jax.Array,
+                   edges: jax.Array, triplets: jax.Array, *, cutoff: float = 5.0,
+                   graph_ids: jax.Array | None = None, n_graphs: int = 1) -> jax.Array:
+    """z: (N,) species ids; pos: (N, 3); edges: (E, 2) directed j→i (phantom N);
+    triplets: (T, 2) (edge_kj, edge_ji) (phantom E). → per-graph energies."""
+    n, e = pos.shape[0], edges.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    valid_e = (src < n)[:, None].astype(pos.dtype)
+    p_src = pos[jnp.minimum(src, n - 1)]
+    p_dst = pos[jnp.minimum(dst, n - 1)]
+    vec = (p_dst - p_src) * valid_e
+    dist = jnp.linalg.norm(vec + 1e-9, axis=-1)
+    rbf = radial_basis(dist, cfg.n_radial, cutoff) * valid_e
+
+    # triplet geometry: angle at j between (k→j) and (j→i)
+    t_kj = jnp.minimum(triplets[:, 0], e - 1)
+    t_ji = jnp.minimum(triplets[:, 1], e - 1)
+    valid_t = (triplets[:, 0] < e)[:, None].astype(pos.dtype)
+    v1 = -vec[t_kj]  # j→k
+    v2 = vec[t_ji]  # j→i ... vec is src→dst = j→i
+    cosang = jnp.sum(v1 * v2, -1) / jnp.maximum(jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9)
+    angle = jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6))
+    sbf = spherical_basis(dist[t_kj], angle, cfg.n_spherical, cfg.n_radial, cutoff) * valid_t
+
+    # embedding block
+    h = jnp.take(params["species"], jnp.minimum(z, params["species"].shape[0] - 1), axis=0)
+    h_src = C.gather_src(h, src)
+    h_dst = C.gather_src(h, dst)
+    m = C.mlp_apply(params["embed_mlp"],
+                    jnp.concatenate([h_src, h_dst, C.mlp_apply(params["rbf_proj"], rbf)], -1))
+
+    energy = jnp.zeros((n,), jnp.float32)
+    for blk in params["blocks"]:
+        t_msg = C.mlp_apply(blk["mlp_src"], m)[t_kj] * valid_t  # (T, d)
+        sb = sbf @ blk["w_sbf"]  # (T, n_bilinear)
+        tri = bilinear_apply(sb, blk["w_bil"], t_msg)
+        agg = jax.ops.segment_sum(tri, t_ji, num_segments=e)
+        m = m + C.mlp_apply(blk["mlp_out"], m + agg)
+        # output block: edge → node with rbf gate
+        gated = m * C.mlp_apply(blk["out_rbf"], rbf)
+        node = C.aggregate(gated, dst, n, "sum")
+        energy = energy + C.mlp_apply(blk["out_mlp"], node)[:, 0].astype(jnp.float32)
+
+    if graph_ids is None:
+        return jnp.sum(energy)[None]
+    # phantom nodes carry graph_id == n_graphs and are dropped
+    return jax.ops.segment_sum(energy, graph_ids, num_segments=n_graphs + 1)[:n_graphs]
+
+
+def mse_loss(params, cfg, z, pos, edges, triplets, target, **kw):
+    pred = forward_energy(params, cfg, z, pos, edges, triplets, **kw)
+    return jnp.mean(jnp.square(pred - target.astype(jnp.float32)))

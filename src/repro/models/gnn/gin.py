@@ -1,0 +1,68 @@
+"""GIN [arXiv:1810.00826]: h' = MLP((1 + ε) h + Σ_{j∈N(i)} h_j), ε learnable.
+
+Supports full-graph node classification, sampled minibatch blocks, and
+batched small graphs (graph classification with sum readout, as on TU data).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import common as C
+
+
+def init_params(key, cfg: GNNConfig, d_in: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "mlp": C.mlp_init(ks[i], [d_in if i == 0 else d, d, d], dtype),
+                "eps": jnp.zeros((), jnp.float32),
+            }
+        )
+    return {
+        "layers": layers,
+        "readout": C.mlp_init(ks[-1], [d, cfg.n_classes], dtype),
+    }
+
+
+def forward_nodes(params: dict, cfg: GNNConfig, x: jax.Array, edges: jax.Array) -> jax.Array:
+    """x: (N, d_in); edges: (E, 2) directed src→dst (pad with phantom N)."""
+    n = x.shape[0]
+    for layer in params["layers"]:
+        msgs = C.gather_src(x, edges[:, 0])
+        agg = C.aggregate(msgs, edges[:, 1], n, cfg.aggregator)
+        x = C.mlp_apply(layer["mlp"], (1.0 + layer["eps"]) * x + agg, act=jax.nn.relu,
+                        final_act=True)
+    return x
+
+
+def logits_nodes(params: dict, cfg: GNNConfig, x, edges) -> jax.Array:
+    return C.mlp_apply(params["readout"], forward_nodes(params, cfg, x, edges))
+
+
+def logits_graphs(params: dict, cfg: GNNConfig, x, edges, graph_ids, n_graphs: int) -> jax.Array:
+    """Batched small graphs: sum-pool node embeddings per graph."""
+    h = forward_nodes(params, cfg, x, edges)
+    pooled = jax.ops.segment_sum(h, graph_ids, num_segments=n_graphs)
+    return C.mlp_apply(params["readout"], pooled)
+
+
+def forward_sampled(params: dict, cfg: GNNConfig, feats: jax.Array, blocks: list[dict]) -> jax.Array:
+    """GraphSAGE-style hop stack: blocks[i] has src_feats gathered upstream.
+
+    Each block dict: {"src_idx": (n_dst*f,), "dst_index": (n_dst*f,),
+    "mask": (n_dst*f,), "n_dst": int}; ``feats`` are the outermost-hop input
+    features indexed by block-local src ids.
+    """
+    x = feats
+    for layer, blk in zip(params["layers"], blocks):
+        msgs = C.gather_src(x, blk["src_idx"]) * blk["mask"][:, None].astype(x.dtype)
+        agg = jax.ops.segment_sum(msgs, blk["dst_index"], num_segments=blk["n_dst"])
+        self_x = x[: blk["n_dst"]]
+        x = C.mlp_apply(layer["mlp"], (1.0 + layer["eps"]) * self_x + agg, act=jax.nn.relu,
+                        final_act=True)
+    return C.mlp_apply(params["readout"], x)

@@ -1,0 +1,59 @@
+"""GraphCast-style encode-process-decode mesh GNN [arXiv:2212.12794].
+
+Encoder embeds per-node input variables (n_vars=227) into d_hidden=512,
+the processor runs 16 InteractionNetwork layers (edge MLP → scatter-sum →
+node MLP, residual, LayerNorm) over the (multi-)mesh edge set, the decoder
+maps back to n_vars outputs (next-state prediction, MSE loss). The assigned
+graph shapes supply the mesh; ``mesh_refinement`` controls the generated
+multiscale mesh in the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import common as C
+
+
+def init_params(key, cfg: GNNConfig, d_in: int | None = None, dtype=jnp.float32) -> dict:
+    d = cfg.d_hidden
+    nv = d_in if d_in is not None else cfg.n_vars
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        k_e, k_n = jax.random.split(ks[3 + i])
+        layers.append(
+            {
+                "edge_mlp": C.mlp_init(k_e, [3 * d, d, d], dtype),  # [h_src, h_dst, e]
+                "node_mlp": C.mlp_init(k_n, [2 * d, d, d], dtype),  # [h, agg]
+            }
+        )
+    return {
+        "encoder": C.mlp_init(ks[0], [nv, d, d], dtype),
+        "edge_embed": C.mlp_init(ks[1], [4, d], dtype),  # edge features: relative pos stub
+        "decoder": C.mlp_init(ks[2], [d, d, nv], dtype),
+        "layers": layers,
+    }
+
+
+def forward(params: dict, cfg: GNNConfig, x: jax.Array, edges: jax.Array,
+            edge_feats: jax.Array | None = None) -> jax.Array:
+    """x: (N, n_vars); edges: (E, 2) src→dst padded with phantom N."""
+    n = x.shape[0]
+    h = C.mlp_apply(params["encoder"], x)
+    if edge_feats is None:
+        edge_feats = jnp.zeros((edges.shape[0], 4), h.dtype)
+    e = C.mlp_apply(params["edge_embed"], edge_feats)
+    for layer in params["layers"]:
+        h_src = C.gather_src(h, edges[:, 0])
+        h_dst = C.gather_src(h, edges[:, 1])
+        e = e + C.mlp_apply(layer["edge_mlp"], jnp.concatenate([h_src, h_dst, e], axis=-1))
+        agg = C.aggregate(e, edges[:, 1], n, cfg.aggregator)
+        h = h + C.layer_norm(C.mlp_apply(layer["node_mlp"], jnp.concatenate([h, agg], axis=-1)))
+    return C.mlp_apply(params["decoder"], h)
+
+
+def mse_loss(params: dict, cfg: GNNConfig, x, edges, target) -> jax.Array:
+    pred = forward(params, cfg, x, edges)
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,102 @@
+"""Shared neural layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rotary_cos_sin(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 → cos/sin of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, D); cos/sin: (S, D//2) broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    cos = cos.reshape(shape).astype(x.dtype)
+    sin = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def activation(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "geglu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated (swiglu/geglu) or plain (relu2, Nemotron-style) MLP."""
+    fn = activation(act)
+    if act == "relu2":
+        h = fn(x @ p["w_in"])
+        return h @ p["w_out"]
+    g = fn(x @ p["w_gate"])
+    h = g * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    if act == "relu2":
+        return {
+            "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+        }
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE in f32. logits: (..., V); labels: (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_cross_entropy(x: jax.Array, unembed: jax.Array, labels: jax.Array,
+                          *, chunk: int = 512) -> jax.Array:
+    """Token-mean CE without ever materializing (B, S, V) logits.
+
+    x: (B, S, D) final hidden states; unembed: (D, V); labels: (B, S).
+    Scans over sequence chunks; each chunk's logits are rematerialized in the
+    backward pass (jax.checkpoint), so live logits are (B, chunk, V_shard).
+    """
+    b, s, d = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // chunk
+
+    @jax.checkpoint
+    def one(xc, lc):
+        logits = jnp.dot(xc, unembed, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(lc >= 0, lse - gold, 0.0))
+
+    def body(acc, i):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        return acc + one(xc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return total / (b * s)

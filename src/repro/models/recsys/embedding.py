@@ -1,0 +1,54 @@
+"""Sparse-feature embedding layer for recsys (EmbeddingBag semantics).
+
+JAX has no native EmbeddingBag or CSR sparse — lookups are jnp.take +
+segment-sum over a single row-sharded table (one table, field offsets), which
+is exactly the layout that shards the vocab dimension over the 'model' mesh
+axis (each shard owns a contiguous row range — the paper's responsible-key
+partitioning applied to embedding rows). The Pallas kernel
+(kernels/embedding_bag) is the TPU hot-path twin for multi-hot bags.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+
+
+def table_shape(cfg: RecsysConfig) -> tuple[int, int]:
+    return (cfg.n_sparse * cfg.vocab_per_field, cfg.embed_dim)
+
+
+def init_table(key, cfg: RecsysConfig, dtype=jnp.float32) -> jax.Array:
+    v, d = table_shape(cfg)
+    return (jax.random.normal(key, (v, d)) * 0.01).astype(dtype)
+
+
+def field_offsets(cfg: RecsysConfig) -> jax.Array:
+    return (jnp.arange(cfg.n_sparse) * cfg.vocab_per_field).astype(jnp.int32)
+
+
+def lookup(table: jax.Array, cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids: (B, n_sparse) per-field categorical ids (already hashed to
+    [0, vocab_per_field)). Returns (B, n_sparse, embed_dim)."""
+    ids = sparse_ids + field_offsets(cfg)[None, :]
+    return jnp.take(table, ids, axis=0)
+
+
+def lookup_multihot(table: jax.Array, cfg: RecsysConfig, bags: jax.Array,
+                    *, use_kernel: bool = False) -> jax.Array:
+    """bags: (B, n_sparse, L) multi-hot ids with sentinel >= vocab_per_field as
+    padding. Returns (B, n_sparse, embed_dim) bag sums (EmbeddingBag)."""
+    b, f, l = bags.shape
+    v = table.shape[0]
+    offs = field_offsets(cfg)[None, :, None]
+    pad = bags >= cfg.vocab_per_field
+    ids = jnp.where(pad, v, bags + offs)  # global sentinel = v
+    if use_kernel:
+        from repro.kernels.embedding_bag.ops import embedding_bag
+
+        out = embedding_bag(table, ids.reshape(b * f, l))
+        return out.reshape(b, f, cfg.embed_dim)
+    safe = jnp.minimum(ids, v - 1)
+    rows = jnp.take(table, safe, axis=0)
+    return jnp.sum(rows * (ids < v)[..., None].astype(table.dtype), axis=2)

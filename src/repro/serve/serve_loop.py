@@ -1,0 +1,64 @@
+"""Batched serving loop: continuous-batching-lite over prefill + decode.
+
+Requests (prompt token arrays) are grouped into fixed-size batches (padding
+short prompts on the left with a pad id), prefilled once, then decoded
+greedily with the KV cache until max_new_tokens. This is the host-side twin
+of the decode_* dry-run cells; on the production mesh the same step functions
+run under the shardings in launch/sharding.py.
+
+NOTE: left-pads are attended causally (no pad mask in the step functions), so
+mixed-length batches are approximate; a production deployment would bucket
+requests by length (the data-pipeline bucketing pattern) or add a pad mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import decode_step, prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_new_tokens: int = 32
+    pad_id: int = 0
+
+
+class LMServer:
+    def __init__(self, params, cfg: LMConfig, serve_cfg: ServeConfig | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg or ServeConfig()
+        self._decode = jax.jit(
+            lambda cache, tok, cur: decode_step(self.params, self.cfg, cache, tok, cur)
+        )
+
+    def generate(self, prompts: list[np.ndarray]) -> list[np.ndarray]:
+        """Greedy-decode a list of int32 prompt arrays. Returns generated ids."""
+        out: list[np.ndarray] = []
+        for i in range(0, len(prompts), self.scfg.max_batch):
+            out.extend(self._generate_batch(prompts[i : i + self.scfg.max_batch]))
+        return out
+
+    def _generate_batch(self, prompts: list[np.ndarray]) -> list[np.ndarray]:
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        s_max = plen + self.scfg.max_new_tokens
+        tokens = np.full((b, plen), self.scfg.pad_id, np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, plen - len(p):] = p  # left-pad → aligned last positions
+        logits, cache = prefill(self.params, self.cfg, jnp.asarray(tokens), s_max,
+                                chunk_q=min(512, plen))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        gen = [tok]
+        for step in range(self.scfg.max_new_tokens - 1):
+            logits, cache = self._decode(cache, tok, jnp.int32(plen + step))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            gen.append(tok)
+        stacked = np.asarray(jnp.concatenate(gen, axis=1))
+        return [stacked[i] for i in range(b)]

@@ -1,0 +1,169 @@
+"""Jittable train/serve step functions per architecture family.
+
+Each builder closes over the static config and returns a pure function
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` (train) or
+the serving equivalent. These are THE functions the dry-run lowers and the
+drivers jit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import transformer as tf
+from repro.models.gnn import dimenet, gin, graphcast, mace
+from repro.models.recsys import autoint
+from repro.train import optimizer as opt
+from repro.train.compression import compressed_psum
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+def lm_loss_remat(params, cfg: LMConfig, batch, *, chunk_q: int = 1024):
+    """loss_fn with per-block rematerialization (activation checkpointing)."""
+    # remat is applied inside forward's scan via jax.checkpoint on the block
+    return tf.loss_fn(params, cfg, batch, chunk_q=chunk_q)
+
+
+def make_lm_train_step(cfg: LMConfig, opt_cfg: opt.AdamWConfig | None = None,
+                       *, chunk_q: int = 1024, remat: bool = True,
+                       ce_chunk: int | None = None, mesh=None,
+                       seq_parallel: bool = False, grad_specs=None) -> Callable:
+    """mesh + seq_parallel=True enables the Megatron-SP residual constraint
+    (sequence dim of the between-layer carry sharded over 'model').
+    grad_specs (a PartitionSpec pytree matching params) constrains gradients
+    to the FSDP layout BEFORE the optimizer — GSPMD then emits
+    reduce-scatters instead of full-gradient all-reduces (§Perf C1)."""
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+    constrain = make_lm_constrain(mesh) if (mesh is not None and seq_parallel) else None
+    ep_mesh = mesh if (mesh is not None and cfg.moe is not None) else None
+    loss = partial(tf.loss_fn, cfg=cfg, chunk_q=chunk_q, remat=remat,
+                   ce_chunk=ce_chunk, constrain=constrain, ep_mesh=ep_mesh)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(lambda p: loss(p, batch=batch))(params)
+        if grad_specs is not None and mesh is not None:
+            from jax.sharding import NamedSharding
+
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, NamedSharding(mesh, s)),
+                grads, grad_specs,
+                is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
+            )
+        params, opt_state = opt.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": l}
+
+    return step
+
+
+def make_lm_constrain(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dpa = dp if len(dp) > 1 else dp[0]
+    specs = {"residual": P(dpa, "model", None)}
+
+    def constrain(x, role):
+        if role not in specs:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, specs[role]))
+
+    return constrain
+
+
+def make_lm_prefill(cfg: LMConfig, s_max: int, *, chunk_q: int = 1024, mesh=None,
+                    seq_parallel: bool = False, cache_dtype=None) -> Callable:
+    import jax.numpy as jnp
+
+    constrain = make_lm_constrain(mesh) if (mesh is not None and seq_parallel) else None
+    ep_mesh = mesh if (mesh is not None and cfg.moe is not None) else None
+    cache_dtype = cache_dtype or jnp.float32
+
+    def step(params, tokens):
+        return tf.prefill(params, cfg, tokens, s_max, chunk_q=chunk_q,
+                          constrain=constrain, ep_mesh=ep_mesh, cache_dtype=cache_dtype)
+
+    return step
+
+
+def make_lm_serve_step(cfg: LMConfig) -> Callable:
+    def step(params, cache, token, cur_len):
+        return tf.decode_step(params, cfg, cache, token, cur_len)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN (dispatch by family)
+# ---------------------------------------------------------------------------
+def gnn_loss(params, cfg: GNNConfig, batch: dict) -> jax.Array:
+    fam = cfg.family
+    if fam == "gin":
+        if "graph_ids" in batch:
+            logits = gin.logits_graphs(params, cfg, batch["x"], batch["edges"],
+                                       batch["graph_ids"], batch["n_graphs"])
+            labels = batch["labels"]
+        elif "blocks" in batch:
+            logits = gin.forward_sampled(params, cfg, batch["x"], batch["blocks"])
+            labels = batch["labels"]
+        else:
+            logits = gin.logits_nodes(params, cfg, batch["x"], batch["edges"])
+            labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    if fam == "graphcast":
+        return graphcast.mse_loss(params, cfg, batch["x"], batch["edges"], batch["target"])
+    if fam == "dimenet":
+        return dimenet.mse_loss(params, cfg, batch["z"], batch["pos"], batch["edges"],
+                                batch["triplets"], batch["target"],
+                                graph_ids=batch.get("graph_ids"),
+                                n_graphs=batch.get("n_graphs", 1))
+    if fam == "mace":
+        return mace.mse_loss(params, cfg, batch["z"], batch["pos"], batch["edges"],
+                             batch["target"], graph_ids=batch.get("graph_ids"),
+                             n_graphs=batch.get("n_graphs", 1))
+    raise ValueError(fam)
+
+
+def make_gnn_train_step(cfg: GNNConfig, opt_cfg: opt.AdamWConfig | None = None) -> Callable:
+    opt_cfg = opt_cfg or opt.AdamWConfig(weight_decay=0.0)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(gnn_loss)(params, cfg, batch)
+        params, opt_state = opt.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": l}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+def make_recsys_train_step(cfg: RecsysConfig, opt_cfg: opt.AdamWConfig | None = None) -> Callable:
+    opt_cfg = opt_cfg or opt.AdamWConfig(weight_decay=0.0)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(autoint.bce_loss)(params, cfg, batch)
+        params, opt_state = opt.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": l}
+
+    return step
+
+
+def make_recsys_serve_step(cfg: RecsysConfig) -> Callable:
+    def step(params, sparse_ids):
+        return jax.nn.sigmoid(autoint.ctr_logits(params, cfg, sparse_ids))
+
+    return step
+
+
+def make_recsys_retrieval_step(cfg: RecsysConfig) -> Callable:
+    def step(params, sparse_ids, candidates):
+        return autoint.retrieval_scores(params, cfg, sparse_ids, candidates)
+
+    return step

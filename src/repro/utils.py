@@ -1,0 +1,15 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_dtype():
+    """Widest available integer dtype for exact triangle counts."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def bytes_of(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(x.size * x.dtype.itemsize for x in leaves if hasattr(x, "dtype"))

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+from repro.graphs.formats import Graph, canonical_edges
+from repro.graphs import generators as gen
+
+
+@pytest.fixture
+def tiny_paper_graph() -> Graph:
+    """The running example of the paper (Fig. 3): exactly one triangle."""
+    # edges (2,1),(1,3),(4,5),(2,3),(4,7),(4,6), 1-indexed in the paper
+    raw = np.array([[2, 1], [1, 3], [4, 5], [2, 3], [4, 7], [4, 6]]) - 1
+    return canonical_edges(raw, n_nodes=7)
+
+
+def random_graph(n: int, p: float, seed: int) -> Graph:
+    return gen.gnp(n, p, seed=seed)

@@ -1,0 +1,95 @@
+"""E(3) invariance/equivariance properties of the MACE implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models.gnn import common as C
+from repro.models.gnn import mace
+from repro.models.gnn.cg import real_cg, real_to_complex, sh_l
+
+
+def _random_rotation(rng) -> np.ndarray:
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def _mol(rng, n=10):
+    pos = rng.normal(size=(n, 3)).astype(np.float64) * 1.4
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    src, dst = np.nonzero((d < 3.0) & (d > 0))
+    edges = np.stack([src, dst], axis=1).astype(np.int32)
+    z = rng.integers(0, 4, size=n)
+    return z, pos, edges
+
+
+def test_u_matrices_unitary():
+    for l in range(3):
+        u = real_to_complex(l)
+        np.testing.assert_allclose(u @ u.conj().T, np.eye(2 * l + 1), atol=1e-12)
+
+
+def test_cg_identities():
+    # 1⊗1→0 is the (scaled) dot product; 1⊗1→1 the cross product
+    c110 = real_cg(1, 1, 0)[:, :, 0]
+    np.testing.assert_allclose(c110, c110[0, 0] * np.eye(3), atol=1e-12)
+    c111 = real_cg(1, 1, 1)
+    np.testing.assert_allclose(c111, -np.transpose(c111, (1, 0, 2)), atol=1e-12)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_mace_energy_rotation_invariant(seed):
+    """Property: global rotation+translation of positions leaves E unchanged."""
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke("mace")
+    z, pos, edges = _mol(rng)
+    params = mace.init_params(jax.random.PRNGKey(seed % 97), cfg)
+    epad = jnp.asarray(C.pad_edges(edges, len(edges) + 4, len(z)))
+
+    e0 = float(mace.forward_energy(params, cfg, jnp.asarray(z),
+                                   jnp.asarray(pos, jnp.float32), epad)[0])
+    rot = _random_rotation(rng)
+    shift = rng.normal(size=(1, 3))
+    pos_r = pos @ rot.T + shift
+    e1 = float(mace.forward_energy(params, cfg, jnp.asarray(z),
+                                   jnp.asarray(pos_r, jnp.float32), epad)[0])
+    np.testing.assert_allclose(e0, e1, rtol=2e-3, atol=2e-4)
+
+
+def test_mace_permutation_invariant():
+    rng = np.random.default_rng(5)
+    cfg = get_smoke("mace")
+    z, pos, edges = _mol(rng)
+    params = mace.init_params(jax.random.PRNGKey(0), cfg)
+    epad = jnp.asarray(C.pad_edges(edges, len(edges) + 4, len(z)))
+    e0 = float(mace.forward_energy(params, cfg, jnp.asarray(z),
+                                   jnp.asarray(pos, jnp.float32), epad)[0])
+    perm = rng.permutation(len(z))
+    inv = np.argsort(perm)
+    z_p = z[perm]
+    pos_p = pos[perm]
+    edges_p = inv[edges]  # relabel endpoints
+    epad_p = jnp.asarray(C.pad_edges(edges_p.astype(np.int32), len(edges_p) + 4, len(z)))
+    e1 = float(mace.forward_energy(params, cfg, jnp.asarray(z_p),
+                                   jnp.asarray(pos_p, jnp.float32), epad_p)[0])
+    np.testing.assert_allclose(e0, e1, rtol=1e-4)
+
+
+def test_sh_rotation_covariance_l1():
+    """l=1 real SH transform exactly like vectors (in the y,z,x ordering)."""
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=(6, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    rot = _random_rotation(rng)
+    y_rot = sh_l((v @ rot.T), 1)
+    # D^1 in the (y,z,x) ordering is the conjugated rotation matrix
+    p = np.array([[0, 1, 0], [0, 0, 1], [1, 0, 0]], dtype=float)  # (y,z,x) <- (x,y,z)
+    d1 = p @ rot @ p.T
+    np.testing.assert_allclose(y_rot, sh_l(v, 1) @ d1.T, atol=1e-10)

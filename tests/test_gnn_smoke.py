@@ -1,0 +1,145 @@
+"""GNN + recsys smoke tests: reduced configs, one forward/train step, shape
+and finiteness assertions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.graphs import generators as gen
+from repro.models.gnn import common as C
+from repro.models.gnn import dimenet, gin, graphcast, mace
+from repro.models.recsys import autoint
+from repro.graphs.sampler import NeighborSampler
+from repro.graphs.formats import to_csr
+
+
+def _toy_graph(n=20, p=0.3, seed=0):
+    g = gen.gnp(n, p, seed=seed)
+    edges = C.bidirect(g.edges)
+    return g, jnp.asarray(C.pad_edges(edges, len(edges) + 7, n))
+
+
+def test_gin_full_graph():
+    cfg = get_smoke("gin_tu")
+    g, edges = _toy_graph()
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n_nodes, 8))
+    params = gin.init_params(jax.random.PRNGKey(1), cfg, d_in=8)
+    out = gin.logits_nodes(params, cfg, x, edges)
+    assert out.shape == (g.n_nodes, cfg.n_classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_gin_batched_graphs_and_grad():
+    cfg = get_smoke("gin_tu")
+    g, edges = _toy_graph(n=24)
+    x = jax.random.normal(jax.random.PRNGKey(0), (24, 8))
+    gid = jnp.asarray(np.repeat([0, 1, 2], 8))
+    params = gin.init_params(jax.random.PRNGKey(1), cfg, d_in=8)
+
+    def loss(p):
+        lg = gin.logits_graphs(p, cfg, x, edges, gid, 3)
+        return jnp.mean(jnp.square(lg))
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def test_gin_sampled_minibatch():
+    cfg = get_smoke("gin_tu")
+    g = gen.powerlaw(200, m_per_node=5, seed=0)
+    indptr, indices = to_csr(g)
+    sampler = NeighborSampler(indptr, indices, fanouts=[5, 3, 2][: cfg.n_layers], seed=0)
+    seeds = np.arange(16)
+    mb = sampler.sample(seeds)
+    # map sampled global ids to local contiguous ids per hop (simplified: use
+    # global feature matrix directly — block src ids index the full x)
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n_nodes, 8))
+    params = gin.init_params(jax.random.PRNGKey(1), cfg, d_in=8)
+    # innermost hop first for forward_sampled; block dicts built from sampler
+    blocks = []
+    for blk in reversed(mb.blocks):
+        blocks.append(
+            {
+                "src_idx": jnp.asarray(blk.src_nodes.astype(np.int32)),
+                "dst_index": jnp.asarray(blk.dst_index),
+                "mask": jnp.asarray(blk.mask),
+                "n_dst": len(blk.nodes),
+            }
+        )
+    out = gin.forward_sampled(params, cfg, x, blocks)
+    assert out.shape[0] == len(mb.blocks[0].nodes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_graphcast_forward_and_loss():
+    cfg = get_smoke("graphcast")
+    g, edges = _toy_graph(n=30)
+    x = jax.random.normal(jax.random.PRNGKey(0), (30, cfg.n_vars))
+    target = jax.random.normal(jax.random.PRNGKey(1), (30, cfg.n_vars))
+    params = graphcast.init_params(jax.random.PRNGKey(2), cfg)
+    out = graphcast.forward(params, cfg, x, edges)
+    assert out.shape == (30, cfg.n_vars)
+    loss, grads = jax.value_and_grad(graphcast.mse_loss)(params, cfg, x, edges, target)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def _molecule(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(size=(n, 3)) * 1.5
+    # edges within cutoff 5.0, directed both ways
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    src, dst = np.nonzero((d < 3.5) & (d > 0))
+    edges = np.stack([src, dst], axis=1).astype(np.int32)
+    z = rng.integers(0, 4, size=n)
+    return z, pos.astype(np.float32), edges
+
+
+def test_dimenet_energy_and_grad():
+    cfg = get_smoke("dimenet")
+    z, pos, edges = _molecule()
+    tri = dimenet.build_triplets(edges, len(z), max_per_edge=6)
+    params = dimenet.init_params(jax.random.PRNGKey(0), cfg)
+    e = dimenet.forward_energy(params, cfg, jnp.asarray(z), jnp.asarray(pos),
+                               jnp.asarray(C.pad_edges(edges, len(edges) + 5, len(z))),
+                               jnp.asarray(tri))
+    assert e.shape == (1,)
+    assert np.isfinite(float(e[0]))
+    loss, grads = jax.value_and_grad(dimenet.mse_loss)(
+        params, cfg, jnp.asarray(z), jnp.asarray(pos),
+        jnp.asarray(C.pad_edges(edges, len(edges) + 5, len(z))), jnp.asarray(tri),
+        jnp.asarray([1.0]),
+    )
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def test_mace_energy_and_grad():
+    cfg = get_smoke("mace")
+    z, pos, edges = _molecule(seed=3)
+    params = mace.init_params(jax.random.PRNGKey(0), cfg)
+    epad = jnp.asarray(C.pad_edges(edges, len(edges) + 5, len(z)))
+    e = mace.forward_energy(params, cfg, jnp.asarray(z), jnp.asarray(pos), epad)
+    assert np.isfinite(float(e[0]))
+    loss, grads = jax.value_and_grad(mace.mse_loss)(
+        params, cfg, jnp.asarray(z), jnp.asarray(pos), epad, jnp.asarray([0.5])
+    )
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def test_autoint_train_and_retrieval():
+    cfg = get_smoke("autoint")
+    params = autoint.init_params(jax.random.PRNGKey(0), cfg)
+    b = 8
+    ids = jax.random.randint(jax.random.PRNGKey(1), (b, cfg.n_sparse), 0, cfg.vocab_per_field)
+    labels = jax.random.bernoulli(jax.random.PRNGKey(2), 0.3, (b,))
+    loss, grads = jax.value_and_grad(autoint.bce_loss)(params, cfg, {"sparse_ids": ids, "labels": labels})
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+    cands = jax.random.normal(jax.random.PRNGKey(3), (1000, cfg.embed_dim))
+    scores = autoint.retrieval_scores(params, cfg, ids[:1], cands)
+    assert scores.shape == (1, 1000)
+    assert np.isfinite(np.asarray(scores)).all()

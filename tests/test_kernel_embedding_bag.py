@@ -1,0 +1,33 @@
+"""EmbeddingBag kernel vs jnp oracle across shapes/dtypes (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@pytest.mark.parametrize("v,d,b,l", [(64, 16, 8, 4), (256, 128, 4, 10), (1000, 32, 16, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_matches_ref(v, d, b, l, dtype):
+    key = jax.random.PRNGKey(v + b)
+    kt, ki, km = jax.random.split(key, 3)
+    table = jax.random.normal(kt, (v, d), dtype=jnp.float32).astype(dtype)
+    idx = jax.random.randint(ki, (b, l), 0, v)
+    # sprinkle sentinel padding
+    pad_mask = jax.random.uniform(km, (b, l)) < 0.3
+    idx = jnp.where(pad_mask, v, idx).astype(jnp.int32)
+    got = embedding_bag(table, idx, interpret=True)
+    want = embedding_bag_ref(table, idx)
+    rtol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=rtol
+    )
+
+
+def test_embedding_bag_all_padding_is_zero():
+    table = jnp.ones((16, 8), jnp.float32)
+    idx = jnp.full((4, 5), 16, jnp.int32)
+    got = embedding_bag(table, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 8), np.float32))

@@ -1,0 +1,52 @@
+"""Flash-attention kernel vs jnp oracle, shape/dtype/GQA sweep (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _mk(b, hq, hkv, s, d, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, s, d), dtype=jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, d), dtype=jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, d), dtype=jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("s", [128, 256])
+def test_flash_matches_ref_f32(hq, hkv, s):
+    q, k, v = _mk(2, hq, hkv, s, 64, jnp.float32)
+    got = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_tolerance():
+    q, k, v = _mk(1, 4, 2, 256, 64, jnp.bfloat16, seed=3)
+    got = flash_attention(q, k, v, interpret=True).astype(jnp.float32)
+    want = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), causal=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_unpadded_vs_padded_seq():
+    # s=200 forces internal padding to 256; result must equal the oracle
+    q, k, v = _mk(1, 2, 2, 200, 64, jnp.float32, seed=7)
+    got = flash_attention(q, k, v, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128)])
+def test_flash_block_shape_invariance(blocks):
+    bq, bk = blocks
+    q, k, v = _mk(1, 2, 1, 256, 64, jnp.float32, seed=9)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,107 @@
+"""Correctness of every triangle-counting path against the brute oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.triangle_ref import count_triangles_brute, count_triangles_dense_ref
+from repro.core.triangle_pipeline import (
+    count_triangles,
+    count_triangles_bitset_ring,
+    count_triangles_dense,
+    count_triangles_ring,
+)
+from repro.core.triangle_mapreduce import (
+    count_triangles_mapreduce,
+    mapreduce_replication_factor,
+)
+from repro.core.partition import ring_partition, stage_costs
+from repro.graphs.formats import degree_order, forward_adjacency_dense
+from repro.graphs import generators as gen
+
+from tests.conftest import random_graph
+
+
+def test_paper_running_example(tiny_paper_graph):
+    g = tiny_paper_graph
+    assert count_triangles_brute(g) == 1
+    assert count_triangles(g, method="dense") == 1
+    assert count_triangles(g, method="sparse") == 1
+    assert count_triangles_mapreduce(g) == 1
+    assert count_triangles_ring(g, n_stages=3, sequential=True) == 1
+    assert count_triangles_bitset_ring(g, n_stages=3, sequential=True) == 1
+
+
+@pytest.mark.parametrize("n,p,seed", [(30, 0.2, 0), (60, 0.5, 1), (40, 0.9, 2), (80, 0.05, 3)])
+def test_all_paths_agree(n, p, seed):
+    g = random_graph(n, p, seed)
+    want = count_triangles_brute(g)
+    assert count_triangles(g, method="dense") == want
+    assert count_triangles(g, method="sparse") == want
+    assert count_triangles_mapreduce(g) == want
+    assert count_triangles_mapreduce(g, streaming=False) == want
+    for s in (1, 2, 4):
+        assert count_triangles_ring(g, n_stages=s, sequential=True) == want
+        assert count_triangles_bitset_ring(g, n_stages=s, sequential=True) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=48),
+    p=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_pipeline_equals_oracle(n, p, seed):
+    """Property: pipeline semantics == oracle for arbitrary G(n, p)."""
+    g = random_graph(n, p, seed)
+    want = count_triangles_brute(g)
+    assert count_triangles(g, method="dense") == want
+    assert count_triangles(g, method="sparse") == want
+    assert count_triangles_ring(g, n_stages=3, sequential=True) == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=40),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    balance=st.booleans(),
+)
+def test_property_order_invariance(n, p, seed, balance):
+    """Any total order / any partition counts every triangle exactly once."""
+    g = random_graph(n, p, seed)
+    want = count_triangles_brute(g)
+    assert count_triangles_ring(g, n_stages=4, balance=balance, sequential=True) == want
+    assert count_triangles_bitset_ring(g, n_stages=4, balance=balance, sequential=True) == want
+
+
+def test_arrival_order_faithful(tiny_paper_graph):
+    """The paper-faithful arrival order is also a valid total order."""
+    g = tiny_paper_graph
+    rank = degree_order(g, mode="arrival")
+    u = jnp.asarray(forward_adjacency_dense(g, rank))
+    assert int(count_triangles_dense(u)) == 1
+
+
+def test_partition_balance_improves_skew():
+    g = gen.powerlaw(300, m_per_node=6, seed=0)
+    bal = ring_partition(g, 4, balance=True)
+    unbal = ring_partition(g, 4, balance=False)
+    c_bal = stage_costs(g, bal)
+    c_unbal = stage_costs(g, unbal)
+    # straggler metric: max/mean stage cost
+    skew_bal = c_bal.max() / max(c_bal.mean(), 1)
+    skew_unbal = c_unbal.max() / max(c_unbal.mean(), 1)
+    assert skew_bal <= skew_unbal + 1e-9
+
+
+def test_replication_factor_matches_definition():
+    g = random_graph(50, 0.5, 0)
+    deg = g.degrees()
+    assert mapreduce_replication_factor(g) == int((deg * (deg - 1) // 2).sum())
+
+
+def test_dense_ref_equals_brute():
+    g = random_graph(64, 0.3, 7)
+    u = forward_adjacency_dense(g)
+    assert count_triangles_dense_ref(u) == count_triangles_brute(g)

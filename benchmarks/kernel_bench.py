@@ -1,31 +1,142 @@
-"""Micro-benchmarks of the counting paths (µs/call on this host's CPU).
+"""Micro-benchmarks of the counting paths + the kernel perf trajectory.
 
-The Pallas kernels are TPU-target; their interpret-mode timings are not
-meaningful, so this table times the XLA paths the kernels replace 1:1 and
-records the kernels' block geometry for the roofline discussion."""
+Two outputs:
+
+- the legacy ``run()`` rows (name, us_per_call, derived) consumed by
+  benchmarks/run.py's CSV contract — the XLA paths the kernels replace 1:1;
+- ``BENCH_kernels.json`` — the machine-readable perf trajectory started by
+  the dead-block-elimination PR: one record per (op, shape, method) with the
+  median wall-clock and the kernel grid-step count, seed baseline next to
+  the optimized path so every later perf PR appends comparable numbers.
+
+On hosts without a TPU the Pallas kernels run in interpret mode; their
+absolute timings are not hardware numbers, but the grid-step counts are
+exact and the interpret-mode wall-clock scales with them, so the dead-block
+win is still visible end-to-end. Run with ``--quick`` for the CI smoke
+variant (small shapes, interpret mode, 3 reps).
+
+Usage: PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out F]
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import statistics
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dynamic_pipeline import run_sequential, run_sequential_python
 from repro.core.triangle_mapreduce import build_mapreduce_operands, _mapreduce_count
-from repro.core.triangle_pipeline import count_triangles_dense, count_triangles_sparse
+from repro.core.triangle_pipeline import (
+    build_bitset_ring_operands,
+    build_dense_ring_operands,
+    count_triangles_dense,
+    count_triangles_sparse,
+    dense_ring_spec,
+)
 from repro.graphs.formats import degree_order, forward_adjacency_dense, forward_adjacency_padded
 from repro.graphs import generators as gen
+from repro.kernels.bitset_count.bitset_count import bitset_edge_count_per_edge_kernel
+from repro.kernels.bitset_count.ops import bitset_edge_count, bitset_grid_steps
+from repro.kernels.triangle_count.ops import triangle_count, triangle_count_grid_steps
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+
+
+def _median_ms(fn, *args, reps: int = 5) -> float:
+    fn(*args)  # compile / warm caches
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(samples)
 
 
 def _time(fn, *args, reps=1):
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6  # µs
+    return _median_ms(fn, *args, reps=max(reps, 1)) * 1e3  # µs, legacy contract
+
+
+def bench_kernels(*, quick: bool = False, reps: int | None = None) -> list[dict]:
+    """Seed-vs-optimized records for both triangle kernels and the scanned
+    sequential runtime."""
+    reps = reps or (3 if quick else 7)
+    records: list[dict] = []
+
+    # ---- dense triangle kernel: full grid (seed) vs live grid ----
+    n, block = (256, 64) if quick else (512, 128)
+    g = gen.gnp(n, 0.4, seed=n)
+    u = jnp.asarray(forward_adjacency_dense(g))
+    for method, live in (("full_grid_seed", False), ("live_grid", True)):
+        ms = _median_ms(
+            lambda live=live: triangle_count(u, block=block, interpret=True, live_grid=live),
+            reps=reps,
+        )
+        records.append({
+            "op": "triangle_count_kernel", "shape": f"{n}x{n}/b{block}",
+            "method": method, "median_ms": round(ms, 3),
+            "grid_steps": triangle_count_grid_steps(n, block=block, live_grid=live),
+        })
+
+    # ---- bitset edge-closure kernel: per-edge (seed) vs blocked tile ----
+    gn = 128 if quick else 256
+    gb = gen.gnp(gn, 0.4, seed=3)
+    _, masks, edge_blocks = build_bitset_ring_operands(gb, 1)
+    mask, eb = jnp.asarray(masks[0]), jnp.asarray(edge_blocks[0])
+    b = int(eb.shape[0])
+    seed_fn = jax.jit(partial(bitset_edge_count_per_edge_kernel, interpret=True))
+    runs = (
+        ("per_edge_seed", lambda: seed_fn(mask, eb), b),
+        ("blocked_tile128", lambda: bitset_edge_count(mask, eb, edge_tile=128, interpret=True),
+         bitset_grid_steps(b, edge_tile=128)),
+    )
+    for method, fn, steps in runs:
+        ms = _median_ms(fn, reps=reps)
+        records.append({
+            "op": "bitset_count_kernel", "shape": f"masks{mask.shape[0]}x{mask.shape[1]}/edges{b}",
+            "method": method, "median_ms": round(ms, 3),
+            "grid_steps": steps,
+        })
+
+    # ---- sequential pipeline runtime: python double loop (seed) vs scan ----
+    sn, stages = (128, 4) if quick else (256, 8)
+    gs = gen.gnp(sn, 0.4, seed=17)
+    part, blocks = build_dense_ring_operands(gs, stages)
+    spec = dense_ring_spec(part.rows_per_stage)
+    blocks = jnp.asarray(blocks)
+    for method, fn in (("python_loop_seed", run_sequential_python),
+                       ("scanned_jit", run_sequential)):
+        ms = _median_ms(lambda fn=fn: fn(spec, blocks, blocks, stages), reps=reps)
+        records.append({
+            "op": "run_sequential", "shape": f"n{sn}/S{stages}",
+            "method": method, "median_ms": round(ms, 3),
+            "grid_steps": stages * stages,  # (stage, block) visits either way
+        })
+
+    return records
+
+
+def write_bench_json(records: list[dict], out_path: str = DEFAULT_OUT) -> str:
+    out_path = os.path.abspath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    payload = {
+        "schema": ["op", "shape", "method", "median_ms", "grid_steps"],
+        "backend": jax.default_backend(),
+        "records": records,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return out_path
 
 
 def run(verbose: bool = True) -> list[dict]:
+    """Legacy CSV rows for benchmarks/run.py (XLA paths, µs/call)."""
     rows = []
     for n, p in [(512, 0.3), (1024, 0.5)]:
         g = gen.gnp(n, p, seed=n)
@@ -49,3 +160,27 @@ def run(verbose: bool = True) -> list[dict]:
             print(f"  n={n} p={p}: dense {us_dense/1e3:8.1f}ms  sparse {us_sparse/1e3:8.1f}ms  "
                   f"mapreduce {us_mr/1e3:8.1f}ms")
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small shapes, interpret mode, 3 reps")
+    ap.add_argument("--out", default=DEFAULT_OUT, help="BENCH_kernels.json path")
+    ap.add_argument("--skip-legacy", action="store_true",
+                    help="only the kernel trajectory, skip the XLA-path table")
+    args = ap.parse_args()
+
+    records = bench_kernels(quick=args.quick)
+    path = write_bench_json(records, args.out)
+    print(f"wrote {len(records)} records -> {path}")
+    for r in records:
+        print(f"  {r['op']:24s} {r['shape']:28s} {r['method']:18s} "
+              f"{r['median_ms']:9.2f} ms  {r['grid_steps']:6d} grid steps")
+    if not (args.quick or args.skip_legacy):
+        print("\nXLA-path table (µs/call):")
+        run()
+
+
+if __name__ == "__main__":
+    main()

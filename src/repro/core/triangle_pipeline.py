@@ -17,7 +17,7 @@ counted exactly once, at its min-rank vertex. Three execution paths:
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -85,14 +85,16 @@ def count_triangles_sparse(
 # --------------------------------------------------------------------------
 # Ring (dense row-block streaming) — the distributed dynamic pipeline
 # --------------------------------------------------------------------------
+@lru_cache(maxsize=None)
 def dense_ring_spec(rows_per_stage: int, *, use_kernel: bool = False, interpret: bool = True) -> FilterSpec:
     """FilterSpec for the dense ring. Resident = this stage's row block U_s
     (R, n_pad); streamed blocks are the row blocks of every stage; block from
     stage k covers ranks [k*R, (k+1)*R) (the k-slice of the contraction).
 
-    Works for f32/bf16/int8 blocks: the contraction always accumulates in a
-    wide type (preferred_element_type), so the 0/1 adjacency can stream at
-    1 byte/entry — 4x less ring traffic than f32 (§Perf iteration 2)."""
+    Works for f32/bf16/uint8 blocks: the contraction always accumulates in a
+    wide type (preferred_element_type), so the 0/1 adjacency streams at
+    1 byte/entry by default — 4x less ring traffic than f32 (see
+    EXPERIMENTS.md §Perf iteration 1)."""
     R = rows_per_stage
 
     def init(u_s):
@@ -120,8 +122,12 @@ def dense_ring_spec(rows_per_stage: int, *, use_kernel: bool = False, interpret:
 
 
 def build_dense_ring_operands(
-    g: Graph, n_stages: int, *, balance: bool = True, pad_to: int = 8, dtype=np.float32
+    g: Graph, n_stages: int, *, balance: bool = True, pad_to: int = 8, dtype=np.uint8
 ) -> tuple[RingPartition, np.ndarray]:
+    """Stage row blocks of the rank-permuted U. Default dtype is uint8: the
+    0/1 adjacency streams around the ring at 1 byte/entry (4x less ring
+    traffic than f32) while the contraction still accumulates wide — see
+    ``dense_ring_spec``. Pass dtype=np.float32 to reproduce the seed layout."""
     part = ring_partition(g, n_stages, balance=balance, pad_to=pad_to)
     n_pad = part.n_pad
     ru = part.rank[g.edges[:, 0]]
@@ -141,15 +147,18 @@ def count_triangles_ring(
     n_stages: int | None = None,
     balance: bool = True,
     use_kernel: bool = False,
+    interpret: bool = True,
     sequential: bool = False,
+    dtype=np.uint8,
 ) -> int:
     """Distributed dense count. With ``sequential=True`` (or a 1-device mesh)
-    runs the paper-faithful chain emulation instead of shard_map."""
+    runs the paper-faithful chain emulation instead of shard_map. Blocks
+    stream as uint8 by default (see ``build_dense_ring_operands``)."""
     if mesh is not None and n_stages is None:
         n_stages = mesh.devices.size
     n_stages = n_stages or 1
-    part, blocks = build_dense_ring_operands(g, n_stages, balance=balance)
-    spec = dense_ring_spec(part.rows_per_stage, use_kernel=use_kernel)
+    part, blocks = build_dense_ring_operands(g, n_stages, balance=balance, dtype=dtype)
+    spec = dense_ring_spec(part.rows_per_stage, use_kernel=use_kernel, interpret=interpret)
     blocks = jnp.asarray(blocks)
     if sequential or mesh is None or mesh.devices.size == 1:
         out = run_sequential(spec, blocks, blocks, n_stages)
@@ -161,23 +170,44 @@ def count_triangles_ring(
 # --------------------------------------------------------------------------
 # Bitset ring (edge-block streaming) — the literal edge stream
 # --------------------------------------------------------------------------
-def bitset_ring_spec() -> FilterSpec:
+# The blocked kernel holds the full (n_pad, W) uint32 mask table VMEM-resident
+# (~8 MB leaves headroom in a 16 MB VMEM) and the (B, 2) int32 edge table as a
+# scalar-prefetch operand in SMEM — both must fit or we fall back to pure JAX.
+_MASK_VMEM_BUDGET = 8 * 1024 * 1024
+_EDGE_SMEM_BUDGET = 256 * 1024
+@lru_cache(maxsize=None)
+def bitset_ring_spec(*, use_kernel: bool = False, interpret: bool = True) -> FilterSpec:
     """Resident = (n_pad, W) uint32 membership bitmask over this stage's
-    responsible ranks; streamed = (B, 2) int32 edge blocks in rank space."""
+    responsible ranks; streamed = (B, 2) int32 edge blocks in rank space.
+
+    ``use_kernel=True`` closes each streamed edge block with the blocked
+    Pallas kernel (edge tiles gathered against the VMEM-resident mask table)
+    instead of the pure-JAX take/popcount path — mirroring the dense ring's
+    ``use_kernel`` switch. The kernel keeps the whole mask table in one VMEM
+    block and the edge endpoints in SMEM, so stages whose mask table exceeds
+    ``_MASK_VMEM_BUDGET`` or whose edge block exceeds ``_EDGE_SMEM_BUDGET``
+    fall back to the pure-JAX path (which the seed per-row-DMA kernel also
+    handled) rather than fail allocation."""
 
     def init(mask):
         return (mask, jnp.zeros((), count_dtype()))
 
     def process(state, edge_block, src):
         mask, acc = state
-        n_pad = mask.shape[0]
-        u = jnp.minimum(edge_block[:, 0], n_pad - 1)
-        v = jnp.minimum(edge_block[:, 1], n_pad - 1)
-        valid = edge_block[:, 0] < n_pad
-        both = jnp.bitwise_and(mask[u], mask[v])
-        pc = jax.lax.population_count(both).sum(axis=-1)
-        acc = acc + jnp.sum(jnp.where(valid, pc, 0), dtype=count_dtype())
-        return (mask, acc)
+        if (use_kernel and mask.size * 4 <= _MASK_VMEM_BUDGET
+                and edge_block.size * 4 <= _EDGE_SMEM_BUDGET):
+            from repro.kernels.bitset_count.ops import bitset_edge_count
+
+            partial_ = bitset_edge_count(mask, edge_block, interpret=interpret)
+        else:
+            n_pad = mask.shape[0]
+            u = jnp.minimum(edge_block[:, 0], n_pad - 1)
+            v = jnp.minimum(edge_block[:, 1], n_pad - 1)
+            valid = edge_block[:, 0] < n_pad
+            both = jnp.bitwise_and(mask[u], mask[v])
+            pc = jax.lax.population_count(both).sum(axis=-1)
+            partial_ = jnp.sum(jnp.where(valid, pc, 0), dtype=count_dtype())
+        return (mask, acc + partial_.astype(count_dtype()))
 
     def finalize(state):
         return state[1]
@@ -212,13 +242,14 @@ def build_bitset_ring_operands(
 
 
 def count_triangles_bitset_ring(
-    g: Graph, *, mesh=None, n_stages: int | None = None, balance: bool = True, sequential: bool = False
+    g: Graph, *, mesh=None, n_stages: int | None = None, balance: bool = True,
+    use_kernel: bool = False, interpret: bool = True, sequential: bool = False
 ) -> int:
     if mesh is not None and n_stages is None:
         n_stages = mesh.devices.size
     n_stages = n_stages or 1
     part, masks, edges = build_bitset_ring_operands(g, n_stages, balance=balance)
-    spec = bitset_ring_spec()
+    spec = bitset_ring_spec(use_kernel=use_kernel, interpret=interpret)
     masks, edges = jnp.asarray(masks), jnp.asarray(edges)
     if sequential or mesh is None or mesh.devices.size == 1:
         out = run_sequential(spec, masks, edges, n_stages)

@@ -1,1 +1,1 @@
-from repro.kernels.bitset_count.ops import bitset_edge_count
+from repro.kernels.bitset_count.ops import bitset_edge_count, bitset_grid_steps

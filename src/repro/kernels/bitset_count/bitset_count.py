@@ -3,11 +3,17 @@
 The paper's filter closes a streamed edge (u, v) against its responsible
 adjacency set; the bitset form packs "u ∈ fwd_adj(r)" into 32 responsible
 nodes per word, so one edge costs W AND+popcount lane ops (VPU, not MXU).
-This kernel processes an edge block per grid step with scalar-prefetched
-edge endpoints driving data-dependent row DMAs of the mask table (same
-pattern as the EmbeddingBag kernel): rows masks[u], masks[v] stream into
-VMEM, the popcount reduces in-register, and a (1,1) int32 output block
-accumulates across the whole grid.
+
+The seed kernel issued one grid step — two (1, W) row DMAs — per single
+edge: at W of a few words those DMAs are far below the sublane granule and
+the kernel is pure DMA-issue overhead. This kernel instead processes an
+*edge tile* of ``edge_tile`` edges per grid step: the mask table is a
+VMEM-resident block (fetched once, revisited across all grid steps because
+its index map is constant), the tile's endpoints arrive via scalar prefetch
+(SMEM), and the kernel gathers the (1, W) mask rows for all edges of the
+tile in-kernel, reducing the AND+popcount in registers and flushing the
+(1, 1) int32 accumulator once per tile — E edges per grid step instead of
+one, grid length m/E instead of m (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
@@ -19,7 +25,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(edges_ref, mu_ref, mv_ref, out_ref, *, n_pad: int):
+def _kernel(edges_ref, masks_ref, out_ref, *, n_pad: int, edge_tile: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def closure(e, acc):
+        # edges_ref lives in SMEM (scalar prefetch): scalar loads drive the
+        # VMEM row gathers — the whole tile reduces without touching HBM.
+        u = edges_ref[t * edge_tile + e, 0]
+        v = edges_ref[t * edge_tile + e, 1]
+        uc = jnp.minimum(u, n_pad - 1)
+        vc = jnp.minimum(v, n_pad - 1)
+        both = jnp.bitwise_and(masks_ref[pl.ds(uc, 1), :], masks_ref[pl.ds(vc, 1), :])
+        pc = jax.lax.population_count(both).sum().astype(jnp.int32)
+        return acc + jnp.where(u < n_pad, pc, 0)
+
+    acc = jax.lax.fori_loop(0, edge_tile, closure, jnp.int32(0))
+    out_ref[0, 0] += acc
+
+
+def _per_edge_kernel(edges_ref, mu_ref, mv_ref, out_ref, *, n_pad: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -35,9 +63,11 @@ def _kernel(edges_ref, mu_ref, mv_ref, out_ref, *, n_pad: int):
         out_ref[0, 0] += pc.astype(jnp.int32)
 
 
-def bitset_edge_count_kernel(masks: jax.Array, edges: jax.Array, *,
-                             interpret: bool = False) -> jax.Array:
-    """masks: (n_pad, W) uint32; edges: (B, 2) int32 (phantom id >= n_pad)."""
+def bitset_edge_count_per_edge_kernel(masks: jax.Array, edges: jax.Array, *,
+                                      interpret: bool = False) -> jax.Array:
+    """The seed kernel: one grid step — two scalar-prefetch-driven (1, W) row
+    DMAs — per single edge. Kept as the recorded baseline the blocked kernel
+    is benchmarked against (BENCH_kernels.json ``per_edge_seed`` rows)."""
     n_pad, w = masks.shape
     b = edges.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -50,8 +80,37 @@ def bitset_edge_count_kernel(masks: jax.Array, edges: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1), lambda i, e: (0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_kernel, n_pad=n_pad),
+        functools.partial(_per_edge_kernel, n_pad=n_pad),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
         interpret=interpret,
     )(edges, masks, masks)[0, 0]
+
+
+def bitset_edge_count_kernel(masks: jax.Array, edges: jax.Array, *,
+                             edge_tile: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """masks: (n_pad, W) uint32; edges: (B, 2) int32 (phantom id >= n_pad).
+
+    B must be a multiple of ``edge_tile`` (ops.py pads with phantom edges,
+    which contribute zero).
+    """
+    n_pad, w = masks.shape
+    b = edges.shape[0]
+    assert b % edge_tile == 0, (b, edge_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b // edge_tile,),
+        in_specs=[
+            # Constant index map: the mask table is fetched into VMEM once
+            # and revisited across every tile step.
+            pl.BlockSpec((n_pad, w), lambda t, e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda t, e: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_pad=n_pad, edge_tile=edge_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(edges, masks)[0, 0]

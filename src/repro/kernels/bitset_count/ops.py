@@ -9,11 +9,29 @@ import jax.numpy as jnp
 from repro.kernels.bitset_count.bitset_count import bitset_edge_count_kernel
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("edge_tile", "interpret"))
 def bitset_edge_count(masks: jax.Array, edges: jax.Array, *,
+                      edge_tile: int = 128,
                       interpret: bool | None = None) -> jax.Array:
     """Σ_e popcount(masks[u_e] & masks[v_e]) — the bitset ring's per-stage
-    counting step. masks: (n_pad, W) uint32; edges: (B, 2) int32."""
+    counting step. masks: (n_pad, W) uint32; edges: (B, 2) int32.
+
+    Edges are padded up to a multiple of ``edge_tile`` with phantom rows
+    (id = n_pad ≥ any real rank), which the kernel masks out, so any B is
+    accepted while every grid step still closes a full tile.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return bitset_edge_count_kernel(masks, edges.astype(jnp.int32), interpret=interpret)
+    n_pad = masks.shape[0]
+    edges = edges.astype(jnp.int32)
+    pad = (-edges.shape[0]) % edge_tile
+    if pad:
+        edges = jnp.pad(edges, ((0, pad), (0, 0)), constant_values=n_pad)
+    return bitset_edge_count_kernel(masks, edges, edge_tile=edge_tile,
+                                    interpret=interpret)
+
+
+def bitset_grid_steps(n_edges: int, *, edge_tile: int = 128) -> int:
+    """Grid steps ``bitset_edge_count`` executes for a B-edge block (the seed
+    kernel ran B steps — one DMA pair per edge)."""
+    return -(-n_edges // edge_tile)

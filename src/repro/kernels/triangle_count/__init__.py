@@ -1,1 +1,5 @@
-from repro.kernels.triangle_count.ops import masked_matmul_sum, triangle_count
+from repro.kernels.triangle_count.ops import (
+    masked_matmul_sum,
+    triangle_count,
+    triangle_count_grid_steps,
+)

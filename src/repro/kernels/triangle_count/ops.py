@@ -6,11 +6,20 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.triangle_count.triangle_count import masked_matmul_sum_kernel
+from repro.kernels.triangle_count.triangle_count import (
+    live_grid_size,
+    masked_matmul_sum_kernel,
+    triangle_count_live_kernel,
+)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Scalar-prefetch operands live in SMEM; cap the live-triple table well below
+# typical SMEM capacity so the compacted grid never fails to compile.
+_SMEM_TABLE_BUDGET = 384 * 1024
 
 
 def _pad2(x: jax.Array, bm: int, bn: int) -> jax.Array:
@@ -51,17 +60,44 @@ def masked_matmul_sum(
     )
 
 
-@partial(jax.jit, static_argnames=("block", "interpret"))
-def triangle_count(u: jax.Array, *, block: int = 128, interpret: bool | None = None) -> jax.Array:
-    """sum(U ⊙ (U@U)) for strictly-upper-triangular U, with the structural
-    block skip (j ≥ i, i ≤ k ≤ j) enabled."""
+@partial(jax.jit, static_argnames=("block", "interpret", "live_grid"))
+def triangle_count(u: jax.Array, *, block: int = 128, interpret: bool | None = None,
+                   live_grid: bool = True) -> jax.Array:
+    """sum(U ⊙ (U@U)) for strictly-upper-triangular U.
+
+    ``live_grid=True`` (default) runs the compacted grid over only the live
+    triples {i ≤ k ≤ j} — C(nb+2, 3) steps, no dead-block fetches.
+    ``live_grid=False`` keeps the seed full-grid kernel (nb³ steps, dead
+    blocks fetched but MXU-skipped) as the comparison baseline.
+
+    The live triple table is a scalar-prefetch operand (SMEM-resident), so
+    very large grids fall back to the full-grid kernel rather than blow the
+    SMEM budget: 12 bytes/triple against ``_SMEM_TABLE_BUDGET`` (nb ≤ ~56 at
+    block 128, i.e. n ≤ ~7k — beyond that the count is ring-partitioned
+    anyway).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     u = _pad2(u, block, block)
-    out = masked_matmul_sum_kernel(
-        u, u, u, block_m=block, block_n=block, block_k=block,
-        upper_triangular=True, interpret=interpret,
-    )
+    nb = u.shape[0] // block
+    if live_grid and live_grid_size(nb) * 12 > _SMEM_TABLE_BUDGET:
+        live_grid = False
+    if live_grid:
+        out = triangle_count_live_kernel(u, block=block, interpret=interpret)
+    else:
+        out = masked_matmul_sum_kernel(
+            u, u, u, block_m=block, block_n=block, block_k=block,
+            upper_triangular=True, interpret=interpret,
+        )
     from repro.utils import count_dtype
 
     return out.astype(count_dtype())
+
+
+def triangle_count_grid_steps(n: int, *, block: int = 128, live_grid: bool = True) -> int:
+    """Grid steps ``triangle_count`` executes for an (n, n) input — the unit
+    the BENCH_kernels.json trajectory tracks. Mirrors the SMEM fallback."""
+    nb = -(-n // block)
+    if live_grid and live_grid_size(nb) * 12 > _SMEM_TABLE_BUDGET:
+        live_grid = False
+    return live_grid_size(nb) if live_grid else nb**3

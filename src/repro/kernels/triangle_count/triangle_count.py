@@ -1,20 +1,30 @@
-"""Blocked masked-matmul-reduce Pallas kernel: sum((A @ B) ⊙ M).
+"""Blocked masked-matmul-reduce Pallas kernels: sum((A @ B) ⊙ M).
 
 This is the counting phase of the dynamic pipeline on the MXU. A is (R, K),
 B is (K, N), M is (R, N); all blocks are VMEM-resident tiles, the contraction
 accumulates into an f32 VMEM scratch, and the masked reduction folds into a
 single (1, 1) output block that stays resident across the whole grid.
 
-Grid = (R/bm, N/bn, K/bk), k fastest-varying (Pallas iterates the last grid
-axis innermost) so the accumulator pattern is the canonical matmul one.
+Two grid strategies:
 
-``upper_triangular=True`` enables the structural skip for the single-matrix
+``masked_matmul_sum_kernel`` — the general rectangular kernel. Grid =
+(R/bm, N/bn, K/bk), k fastest-varying (Pallas iterates the last grid axis
+innermost) so the accumulator pattern is the canonical matmul one.
+``upper_triangular=True`` adds the structural skip for the single-matrix
 triangle count U@U⊙U: the M block (i, j) is all-zero when j < i, and the
 k-th contraction slice is all-zero unless i ≤ k ≤ j (U is strictly upper
 triangular: U[i,k] needs k > i-block-start, U[k,j] needs k < j-block-end).
-Skipped blocks cost a VMEM fetch but no MXU work (`pl.when`), cutting MXU
-occupancy of redundant blocks by ~6x on large n — the paper's "useful work"
-fraction (see EXPERIMENTS.md §Perf).
+Skipped blocks cost no MXU work (`pl.when`) but STILL cost three VMEM
+fetches per dead triple — the full grid is ~6x larger than the live set.
+
+``triangle_count_live_kernel`` — the live-grid kernel. The host enumerates
+exactly the live triples {(i, j, k) : i ≤ j, i ≤ k ≤ j} once
+(``live_grid_indices``), and the kernel runs a compacted 1-D grid over them
+with the triple table scalar-prefetched (``pltpu.PrefetchScalarGridSpec``)
+driving the BlockSpec index maps. Dead blocks are never part of the grid, so
+they cost neither MXU work *nor* VMEM fetches: C(nb+2, 3) grid steps instead
+of nb³ — the paper's "useful work only" claim rendered in the memory system,
+not just in occupancy (see EXPERIMENTS.md §Perf for recorded counts).
 """
 from __future__ import annotations
 
@@ -22,8 +32,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _widen(x: jax.Array) -> jax.Array:
+    """MXU operand dtype: integer 0/1 adjacency (uint8 ring streaming) is
+    exact in f32 for per-block contractions (entries ≤ block_k < 2^24)."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x.astype(jnp.float32)
+    return x
 
 
 def _kernel(a_ref, b_ref, m_ref, out_ref, acc_ref, *, n_k: int, upper_triangular: bool):
@@ -45,7 +64,7 @@ def _kernel(a_ref, b_ref, m_ref, out_ref, acc_ref, *, n_k: int, upper_triangular
     @pl.when(live)
     def _accumulate():
         acc_ref[...] += jnp.dot(
-            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+            _widen(a_ref[...]), _widen(b_ref[...]), preferred_element_type=jnp.float32
         )
 
     @pl.when(k == n_k - 1)
@@ -53,7 +72,7 @@ def _kernel(a_ref, b_ref, m_ref, out_ref, acc_ref, *, n_k: int, upper_triangular
         # per-block sum is exact in f32 (≤ block_m·block_n·block_k < 2^24);
         # the RUNNING total accumulates in int32 — f32 accumulation loses
         # exactness past 2^24 total
-        blk = jnp.sum(acc_ref[...] * m_ref[...].astype(jnp.float32))
+        blk = jnp.sum(acc_ref[...] * _widen(m_ref[...]))
         out_ref[0, 0] += blk.astype(jnp.int32)
 
 
@@ -90,4 +109,89 @@ def masked_matmul_sum_kernel(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(a, b, m)
+    return out[0, 0]
+
+
+# --------------------------------------------------------------------------
+# Live-grid kernel: dead upper-triangular blocks are not in the grid at all
+# --------------------------------------------------------------------------
+def live_grid_indices(n_blocks: int) -> np.ndarray:
+    """Enumerate the live triples of the U@U⊙U block grid.
+
+    Returns (n_live, 3) int32 rows (i, j, k) with i ≤ j and i ≤ k ≤ j, k
+    innermost per (i, j) run so the accumulator lifecycle is init at k == i,
+    flush at k == j. n_live = Σ_{i≤j} (j−i+1) = C(nb+2, 3), vs nb³ for the
+    full grid (~6x at large nb).
+    """
+    triples = [
+        (i, j, k)
+        for i in range(n_blocks)
+        for j in range(i, n_blocks)
+        for k in range(i, j + 1)
+    ]
+    return np.asarray(triples, dtype=np.int32).reshape(-1, 3)
+
+
+def live_grid_size(n_blocks: int) -> int:
+    """C(nb+2, 3) — closed form of ``len(live_grid_indices(nb))``."""
+    return n_blocks * (n_blocks + 1) * (n_blocks + 2) // 6
+
+
+def _live_kernel(idx_ref, a_ref, b_ref, m_ref, out_ref, acc_ref):
+    g = pl.program_id(0)
+    i, j, k = idx_ref[g, 0], idx_ref[g, 1], idx_ref[g, 2]
+
+    @pl.when(g == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == i)  # first contraction step of this (i, j) block run
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        _widen(a_ref[...]), _widen(b_ref[...]), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == j)  # last contraction step: fold the masked block sum
+    def _reduce():
+        blk = jnp.sum(acc_ref[...] * _widen(m_ref[...]))
+        out_ref[0, 0] += blk.astype(jnp.int32)
+
+
+def triangle_count_live_kernel(
+    u: jax.Array,
+    *,
+    block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """sum(U ⊙ (U @ U)) over the compacted live grid.
+
+    U must be square, strictly upper triangular, and padded to a multiple of
+    ``block`` (ops.py pads). The (n_live, 3) triple table is scalar-prefetched
+    and drives every BlockSpec index map, so each grid step DMAs exactly the
+    three live tiles it needs.
+    """
+    n, n2 = u.shape
+    assert n == n2 and n % block == 0, u.shape
+    nb = n // block
+    idx = jnp.asarray(live_grid_indices(nb))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(idx.shape[0],),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda g, t: (t[g, 0], t[g, 2])),  # A(i, k)
+            pl.BlockSpec((block, block), lambda g, t: (t[g, 2], t[g, 1])),  # B(k, j)
+            pl.BlockSpec((block, block), lambda g, t: (t[g, 0], t[g, 1])),  # M(i, j)
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda g, t: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _live_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(idx, u, u, u)
     return out[0, 0]

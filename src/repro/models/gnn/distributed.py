@@ -115,7 +115,7 @@ def local_scatter_sum(msg: jax.Array, dst: jax.Array, n_loc: int,
 
         return jax.vmap(one)(msg, local)
 
-    from jax import shard_map
+    from repro.utils import shard_map_compat as shard_map
 
     axes = tuple(mesh.axis_names)
 
@@ -128,7 +128,7 @@ def local_scatter_sum(msg: jax.Array, dst: jax.Array, n_loc: int,
 
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axes, None, None), P(axes, None)),
-                     out_specs=P(axes, None, None), check_vma=False)(msg, dst)
+                     out_specs=P(axes, None, None))(msg, dst)
 
 
 def local_take(arr: jax.Array, idx: jax.Array, mesh: Mesh | None = None) -> jax.Array:
@@ -139,7 +139,7 @@ def local_take(arr: jax.Array, idx: jax.Array, mesh: Mesh | None = None) -> jax.
     if mesh is None:
         return jax.vmap(lambda a, i: a[i])(arr, idx)
 
-    from jax import shard_map
+    from repro.utils import shard_map_compat as shard_map
 
     axes = tuple(mesh.axis_names)
 
@@ -148,7 +148,7 @@ def local_take(arr: jax.Array, idx: jax.Array, mesh: Mesh | None = None) -> jax.
 
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axes, None, None), P(axes, None)),
-                     out_specs=P(axes, None, None), check_vma=False)(arr, idx)
+                     out_specs=P(axes, None, None))(arr, idx)
 
 
 def local_segment_sum(vals: jax.Array, ids: jax.Array, num: int,
@@ -158,7 +158,7 @@ def local_segment_sum(vals: jax.Array, ids: jax.Array, num: int,
     if mesh is None:
         return jax.vmap(lambda v, i: jax.ops.segment_sum(v, i, num_segments=num))(vals, ids)
 
-    from jax import shard_map
+    from repro.utils import shard_map_compat as shard_map
 
     axes = tuple(mesh.axis_names)
 
@@ -167,7 +167,7 @@ def local_segment_sum(vals: jax.Array, ids: jax.Array, num: int,
 
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axes, None, None), P(axes, None)),
-                     out_specs=P(axes, None, None), check_vma=False)(vals, ids)
+                     out_specs=P(axes, None, None))(vals, ids)
 
 
 def _reshape_edges(edges: jax.Array, n_dev: int) -> jax.Array:
@@ -179,7 +179,7 @@ def replicate_rows(x: jax.Array, mesh: Mesh) -> jax.Array:
     Unlike a replicated with_sharding_constraint, this cannot leak a
     'replicated' sharding choice back into the producer (measured: the layer
     scan's h carry stack became a replicated 21 GiB/device buffer)."""
-    from jax import shard_map
+    from repro.utils import shard_map_compat as shard_map
 
     axes = tuple(mesh.axis_names)
 
@@ -187,7 +187,7 @@ def replicate_rows(x: jax.Array, mesh: Mesh) -> jax.Array:
         return jax.lax.all_gather(xl, axes, axis=0, tiled=True)
 
     return shard_map(body, mesh=mesh, in_specs=P(axes, None),
-                     out_specs=P(None, None), check_vma=False)(x)
+                     out_specs=P(None, None))(x)
 
 
 # ---------------------------------------------------------------------------

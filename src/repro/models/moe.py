@@ -85,7 +85,7 @@ def moe_apply_ep(p: dict, cfg: LMConfig, x: jax.Array, *, mesh,
     the capacity bound as the straggler guard (tokens beyond capacity drop,
     GShard semantics). Static shapes throughout; exact when capacity_factor
     is generous (tests verify against moe_apply)."""
-    from jax import shard_map
+    from repro.utils import shard_map_compat as shard_map
     from jax.sharding import PartitionSpec as P
 
     mo = cfg.moe
@@ -140,7 +140,6 @@ def moe_apply_ep(p: dict, cfg: LMConfig, x: jax.Array, *, mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None), P(dpa, None)),
         out_specs=(P(dpa, None), P()),
-        check_vma=False,
     )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
 
     if mo.n_shared:

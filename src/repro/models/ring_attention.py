@@ -11,12 +11,17 @@ a real 8-device shard_map ring).
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.dynamic_pipeline import DynamicPipeline, FilterSpec, run_sequential
 
 
+# Memoized so repeated calls reuse one FilterSpec object and hit the compiled
+# run_sequential / DynamicPipeline.jit caches instead of re-tracing.
+@lru_cache(maxsize=None)
 def ring_attention_spec(block: int, n_stages: int, d: int, *, causal: bool = True,
                         scale: float | None = None) -> FilterSpec:
     """Resident = (me, q_block); stream = (k_block, v_block) pairs.

@@ -4,6 +4,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+try:  # jax >= 0.5 exports shard_map at top level
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax 0.4.x keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across the jax API rename
+    (``check_rep`` in 0.4.x became ``check_vma`` in newer releases)."""
+    try:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+
 
 def count_dtype():
     """Widest available integer dtype for exact triangle counts."""

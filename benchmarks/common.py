@@ -19,25 +19,36 @@ WORKER = textwrap.dedent(
     spec = json.loads(sys.argv[1])
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={spec.get('devices', 1)}"
     import numpy as np
+    from repro.api import GraphStats, Resources, TriangleCounter, plan
+
     from repro.graphs.datasets import load
-    from repro.core.triangle_pipeline import count_triangles, count_triangles_ring
-    from repro.core.triangle_mapreduce import count_triangles_mapreduce
 
     g = load(spec["graph"], scale=spec.get("scale", 1.0), seed=0)
     t0 = time.time()
     method = spec["method"]
-    if method == "pipeline":
-        # adaptive path choice — dense for small n, sparse for big sparse
-        # graphs (the dynamic pipeline's input adaptation)
-        if g.n_nodes <= 6000:
-            count = count_triangles(g, method="dense")
-        else:
-            count = count_triangles(g, method="sparse")
+    plan_info = None
+    if method in ("auto", "pipeline"):
+        # Method selection is the LIBRARY's job: the planner picks among the
+        # paper-grounded regimes ("pipeline" restricts it to the pipeline
+        # family; "auto" considers everything) and records why.
+        allow = None if method == "auto" else {"dense", "ring", "sparse", "bitset_ring"}
+        devices = spec.get("devices", 1)
+        mesh = None
+        if devices > 1:
+            from repro.launch.mesh import make_ring_mesh
+            mesh = make_ring_mesh(devices)
+        counter = TriangleCounter(Resources(n_devices=devices), mesh=mesh)
+        p = plan(GraphStats.from_graph(g), counter.resources, allow=allow)
+        res = counter.count(g, plan=p)
+        count = res.item()
+        plan_info = p.to_dict()
     elif method == "pipeline_ring":
         from repro.launch.mesh import make_ring_mesh
+        from repro.core.triangle_pipeline import count_triangles_ring
         mesh = make_ring_mesh(spec.get("devices", 1))
         count = count_triangles_ring(g, mesh=mesh)
     elif method == "mapreduce":
+        from repro.core.triangle_mapreduce import count_triangles_mapreduce
         count = count_triangles_mapreduce(g, streaming=spec.get("streaming", True))
     else:
         raise ValueError(method)
@@ -46,6 +57,7 @@ WORKER = textwrap.dedent(
     print("RESULT " + json.dumps({
         "count": int(count), "wall_s": wall, "maxrss_mb": rss_mb,
         "n": g.n_nodes, "m": g.n_edges, "density": g.density,
+        "plan": plan_info,
     }))
     """
 )

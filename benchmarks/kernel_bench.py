@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Plan, TriangleCounter
 from repro.core.dynamic_pipeline import run_sequential, run_sequential_python
 from repro.core.triangle_mapreduce import build_mapreduce_operands, _mapreduce_count
 from repro.core.triangle_pipeline import (
@@ -118,6 +119,54 @@ def bench_kernels(*, quick: bool = False, reps: int | None = None) -> list[dict]
             "grid_steps": stages * stages,  # (stage, block) visits either way
         })
 
+    # counter_bench's reps means "number of benchmark graphs", not timing
+    # repetitions — let it use its own defaults (4 quick / 8 full)
+    records += counter_bench(quick=quick)
+    return records
+
+
+def counter_bench(*, quick: bool = False, reps: int | None = None) -> list[dict]:
+    """Compile-cache trajectory of the unified API: a stream of graphs with
+    DISTINCT node counts in one padded-shape bucket. The per-shape jit path
+    (seed behavior of repeated ``count_triangles`` calls) retraces on every
+    new shape; ``TriangleCounter`` pads to the bucket and traces once, so
+    steady-state per-call latency is a cache hit. ``grid_steps`` records the
+    number of traces taken over the run."""
+    reps = reps or (4 if quick else 8)
+    n0 = 96 if quick else 192
+    ns = [n0 + 2 * i for i in range(reps)]  # all inside one power-of-two bucket
+    graphs = [gen.gnp(n, 0.4, seed=n) for n in ns]
+    shape = f"n{ns[0]}..{ns[-1]}/dense"
+    records = []
+
+    legacy = jax.jit(count_triangles_dense)
+    samples = []
+    for g in graphs:
+        u = jnp.asarray(forward_adjacency_dense(g))
+        t0 = time.perf_counter()
+        int(legacy(u))
+        samples.append((time.perf_counter() - t0) * 1e3)
+    # one trace per distinct shape; _cache_size is private jax API, so fall
+    # back to the shape count (equal by construction) if it disappears
+    cache_size = getattr(legacy, "_cache_size", lambda: len(set(ns)))()
+    records.append({
+        "op": "triangle_counter", "shape": shape, "method": "per_shape_retrace_seed",
+        "median_ms": round(statistics.median(samples), 3),
+        "grid_steps": cache_size,
+    })
+
+    counter = TriangleCounter()
+    p = Plan(method="dense", reason="counter_bench fixed dense plan")
+    samples = []
+    for g in graphs:
+        t0 = time.perf_counter()
+        counter.count(g, plan=p).item()
+        samples.append((time.perf_counter() - t0) * 1e3)
+    records.append({
+        "op": "triangle_counter", "shape": shape, "method": "counter_cache_hit",
+        "median_ms": round(statistics.median(samples), 3),
+        "grid_steps": counter.cache_info["traces"],
+    })
     return records
 
 

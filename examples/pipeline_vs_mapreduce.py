@@ -1,28 +1,32 @@
 """The paper's headline experiment in miniature: on a dense graph the dynamic
 pipeline beats MapReduce by orders of magnitude because MapReduce's Round-I
-2-path materialization scales with Σ deg² (the replication factor).
+2-path materialization scales with Σ deg² (the replication factor). The
+planner encodes exactly this: it refuses MapReduce once the replication
+factor blows past the input size, and its chosen plan is printed per row.
 
     PYTHONPATH=src python examples/pipeline_vs_mapreduce.py
 """
 import time
 
-import jax
-
+from repro.api import GraphStats, TriangleCounter, plan
 from repro.core.triangle_mapreduce import count_triangles_mapreduce, mapreduce_replication_factor
-from repro.core.triangle_pipeline import count_triangles
 from repro.graphs import generators as gen
+
+counter = TriangleCounter()
 
 for density in (0.1, 0.5, 0.9):
     g = gen.gnp(1000, density, seed=1)  # DSJC family, full paper size
     rf = mapreduce_replication_factor(g)
+    p = plan(GraphStats.from_graph(g))
 
     t0 = time.time()
-    d = count_triangles(g, method="dense")
+    result = counter.count(g, plan=p)
+    d = result.item()
     t_pipe = time.time() - t0
 
     t0 = time.time()
     m = count_triangles_mapreduce(g)
     t_mr = time.time() - t0
     assert d == m
-    print(f"density {density:.1f}: Δ={d:>12d}  pipeline {t_pipe:6.2f}s  "
+    print(f"density {density:.1f}: Δ={d:>12d}  {p.method:6s} {t_pipe:6.2f}s  "
           f"mapreduce {t_mr:6.2f}s  (speedup {t_mr / t_pipe:5.1f}x, RF={rf:.2e})")

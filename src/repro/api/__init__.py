@@ -1,0 +1,62 @@
+"""Unified counting API: one planned, compile-cached front door.
+
+The paper ("Comparing MapReduce and Pipeline Implementations for Counting
+Triangles") shows that the right Divide-and-Conquer *shape* is a function of
+measurable input properties; this package encodes that finding as
+``plan(GraphStats, Resources) -> Plan`` and executes every plan through one
+``TriangleCounter`` returning one ``CountResult`` contract.
+
+Plan method → paper section map:
+
+- ``dense`` / ``ring``   — the dynamic pipeline (§3, Figs 4–9): filters hold
+  forward adjacency; on TPU the filter chain is the dense U·U⊙U contraction,
+  row-block-sharded around the device ring for ``ring``. Wins on the dense
+  DSJC/FNA families (§5, Figs 10–13).
+- ``sparse``             — the same pipeline semantics on padded sorted
+  forward-adjacency; the memory-bound rendering that handles the NY road
+  network (§5 Table 1's sparse extreme).
+- ``bitset_ring``        — the most literal edge-streaming pipeline: stage-
+  resident membership bitsets, edge blocks flowing through the ring (§3's
+  filter/forward loop).
+- ``mapreduce``          — the Suri–Vassilvitskii two-round baseline (§4).
+  The planner refuses it when the replication factor Σ_v C(deg(v), 2)
+  (Afrati–Ullman's communication cost, §2 related work) exceeds
+  ``MR_RF_FACTOR``× the input — the paper's dense-graph blowup.
+- ``stream``             — the "graph dynamically generated / does not fit in
+  memory" regime (§1, §5 discussion): incremental bitset fold, each triangle
+  counted when its last edge arrives.
+
+``count_triangles(g, method=...)`` survives as a deprecated shim over the
+default counter.
+"""
+from repro.api.planner import (
+    METHODS,
+    MR_RF_FACTOR,
+    GraphStats,
+    Plan,
+    Resources,
+    plan,
+    plan_for_graph,
+)
+from repro.api.counter import (
+    CountResult,
+    TriangleCounter,
+    bucket,
+    count_triangles,
+    default_counter,
+)
+
+__all__ = [
+    "METHODS",
+    "MR_RF_FACTOR",
+    "GraphStats",
+    "Plan",
+    "Resources",
+    "plan",
+    "plan_for_graph",
+    "CountResult",
+    "TriangleCounter",
+    "bucket",
+    "count_triangles",
+    "default_counter",
+]

@@ -1,0 +1,388 @@
+"""``TriangleCounter`` — the planned, compile-cached execution engine.
+
+One object owns one compile cache, keyed by ``(plan.cache_key(), shape
+bucket)``: operands are padded up to power-of-two buckets with the phantom
+convention each path already understands (zero rows for the dense matmul,
+sentinel ids >= n_pad for sparse/mapreduce/stream), so repeated calls on
+same-bucket graphs reuse one traced executable instead of retracing per
+shape. Every entry point returns a :class:`CountResult` whose ``count`` stays
+a device array until ``.item()`` — callers that feed the count onward (batch
+aggregation, the serve loop) never pay a host sync per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.planner import GraphStats, Plan, Resources, plan as plan_fn
+from repro.utils import count_dtype
+
+
+def bucket(x: int, minimum: int = 64) -> int:
+    """Next power of two >= x (>= minimum) — the shape-bucketing policy."""
+    b = minimum
+    while b < x:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class CountResult:
+    """The single result contract for every counting path.
+
+    count:  device array — scalar for ``count``/``count_stream``, a vector of
+            per-graph counts for ``count_batch``. Stays on device until
+            ``.item()`` / ``np.asarray`` so hot loops avoid per-call syncs.
+    plan:   the executed :class:`Plan` (method, predicted bytes, reason).
+    wall_s: host wall time of build+dispatch (async dispatch: excludes device
+            completion unless the path is synchronous anyway).
+    stats:  per-run details — cache key/hit/trace count, stage costs for ring
+            plans, block counts for streams.
+    """
+
+    count: Any
+    plan: Plan
+    wall_s: float
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def item(self) -> int:
+        return int(np.asarray(self.count).item())
+
+    def __int__(self) -> int:
+        return self.item()
+
+
+class _Entry:
+    __slots__ = ("fn", "traces", "hits")
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.traces = 0
+        self.hits = -1  # first use is the miss
+
+
+class TriangleCounter:
+    """The front door: plan (or accept a plan), execute, cache the compile.
+
+    ``mesh`` routes ring plans through ``DynamicPipeline``; without one they
+    run the paper-faithful sequential chain emulation.
+    """
+
+    def __init__(self, resources: Resources | None = None, *,
+                 plan: Plan | None = None, mesh=None):
+        self.resources = resources or Resources()
+        self.fixed_plan = plan
+        self.mesh = mesh
+        self._cache: dict[tuple, _Entry] = {}
+
+    # -- planning ----------------------------------------------------------
+    def plan_for(self, g, *, allow: set[str] | None = None) -> Plan:
+        if self.fixed_plan is not None:
+            return self.fixed_plan
+        return plan_fn(GraphStats.from_graph(g), self.resources, allow=allow)
+
+    # -- compile cache -----------------------------------------------------
+    def _entry(self, key: tuple, make) -> _Entry:
+        entry = self._cache.get(key)
+        if entry is None:
+            entry = _Entry(None)
+            entry.fn = make(entry)
+            self._cache[key] = entry
+        entry.hits += 1
+        return entry
+
+    @property
+    def cache_info(self) -> dict:
+        return {
+            "entries": len(self._cache),
+            "traces": sum(e.traces for e in self._cache.values()),
+            "hits": sum(max(e.hits, 0) for e in self._cache.values()),
+        }
+
+    # -- entry points ------------------------------------------------------
+    def count(self, g, *, plan: Plan | None = None) -> CountResult:
+        """Count triangles in a memory-resident graph under ``plan`` (or the
+        planner's choice)."""
+        p = plan or self.plan_for(g)
+        t0 = time.perf_counter()
+        executor = getattr(self, f"_run_{p.method}", None)
+        if executor is None:
+            raise ValueError(f"plan method {p.method!r} not executable here")
+        count, stats = executor(g, p)
+        return CountResult(count=count, plan=p,
+                           wall_s=time.perf_counter() - t0, stats=stats)
+
+    def count_stream(self, n_nodes: int, blocks: Iterable, *,
+                     plan: Plan | None = None,
+                     block_size: int | None = None) -> CountResult:
+        """Fold an iterable of (B, 2) edge blocks — ``core.streaming`` behind
+        the same result contract. Blocks are padded/split to one fixed size
+        (``block_size``, else the plan's if one was given, else the first
+        block's) so exactly one trace is ever taken."""
+        from repro.core import streaming
+
+        p = plan or self.fixed_plan
+        if block_size is None and p is not None:
+            block_size = p.block_size
+        if p is None:
+            stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
+                               max_degree=0, max_fwd_degree=0, edges_in_memory=False)
+            p = plan_fn(stats, self.resources)
+        t0 = time.perf_counter()
+        traces0 = streaming.ingest_trace_count()
+        state = streaming.init_state(n_nodes)
+        n_blocks = 0
+        for b in streaming.padded_blocks(blocks, n_nodes, block_size=block_size):
+            state = streaming.ingest_block(state, b)
+            n_blocks += 1
+        return CountResult(
+            count=state["count"], plan=p, wall_s=time.perf_counter() - t0,
+            stats={"n_blocks": n_blocks,
+                   "ingest_traces": streaming.ingest_trace_count() - traces0},
+        )
+
+    def count_batch(self, graphs: list, *, plan: Plan | None = None) -> CountResult:
+        """Vmapped dense path over many small graphs: one compiled executable
+        per (batch bucket, node bucket) counts the whole batch in one call.
+        ``count`` is the (len(graphs),) per-graph vector."""
+        from repro.graphs.formats import forward_adjacency_dense
+
+        if not graphs:
+            raise ValueError("empty batch")
+        p = plan or Plan(method="dense", reason="batched dense path")
+        t0 = time.perf_counter()
+        n_b = bucket(max(g.n_nodes for g in graphs))
+        b_b = bucket(len(graphs), minimum=8)
+        us = np.zeros((b_b, n_b, n_b), np.float32)
+        for i, g in enumerate(graphs):
+            us[i, :g.n_nodes, :g.n_nodes] = forward_adjacency_dense(g)
+        key = (("batch_dense",) + p.cache_key(), (b_b, n_b))
+        entry = self._entry(key, self._make_batch_dense)
+        counts = entry.fn(jnp.asarray(us))[: len(graphs)]
+        return CountResult(
+            count=counts, plan=p, wall_s=time.perf_counter() - t0,
+            stats={"cache": self._cache_stats(key, entry),
+                   "batch_size": len(graphs), "bucket": (b_b, n_b)},
+        )
+
+    def _cache_stats(self, key: tuple, entry: _Entry) -> dict:
+        return {"key": key, "hit": entry.hits > 0, "traces": entry.traces}
+
+    # -- executors (one per plan method) -----------------------------------
+    def _run_dense(self, g, p: Plan):
+        from repro.graphs.formats import forward_adjacency_dense
+
+        n_b = bucket(g.n_nodes)
+        u = np.zeros((n_b, n_b), np.float32)
+        u[: g.n_nodes, : g.n_nodes] = forward_adjacency_dense(g)
+        key = (p.cache_key(), (n_b,))
+        entry = self._entry(key, lambda e: self._make_dense(e, p))
+        return entry.fn(jnp.asarray(u)), {"cache": self._cache_stats(key, entry)}
+
+    def _make_dense(self, entry: _Entry, p: Plan):
+        from repro.core.triangle_pipeline import count_triangles_dense
+
+        def body(u):
+            entry.traces += 1
+            return count_triangles_dense(u, use_kernel=p.use_kernel,
+                                         interpret=p.interpret)
+
+        return jax.jit(body)
+
+    def _make_batch_dense(self, entry: _Entry):
+        from repro.core.triangle_pipeline import count_triangles_dense
+
+        def body(us):
+            entry.traces += 1
+            return jax.vmap(count_triangles_dense)(us)
+
+        return jax.jit(body)
+
+    def _run_sparse(self, g, p: Plan):
+        from repro.graphs.formats import degree_order, forward_adjacency_padded
+
+        rank = degree_order(g)
+        nbrs, _ = forward_adjacency_padded(g, rank)
+        n, md = nbrs.shape
+        n_b = bucket(n)
+        md_b = bucket(max(md, 1), minimum=8)
+        # re-sentinel into bucket space: padding value must equal n_pad = n_b
+        nb = np.full((n_b, md_b), n_b, np.int32)
+        nb[:n, :md] = np.where(nbrs == n, n_b, nbrs)
+        ru = rank[g.edges[:, 0]]
+        rv = rank[g.edges[:, 1]]
+        edges = np.stack([np.minimum(ru, rv), np.maximum(ru, rv)], axis=1)
+        m_b = bucket(max(g.n_edges, 1), minimum=256)
+        ed = np.full((m_b, 2), n_b, np.int32)
+        ed[: g.n_edges] = edges
+        key = (p.cache_key(), (n_b, md_b, m_b))
+        entry = self._entry(key, lambda e: self._make_sparse(e, p))
+        return entry.fn(jnp.asarray(nb), jnp.asarray(ed)), \
+            {"cache": self._cache_stats(key, entry)}
+
+    def _make_sparse(self, entry: _Entry, p: Plan):
+        from repro.core.triangle_pipeline import count_triangles_sparse
+
+        def body(nbrs, edges):
+            entry.traces += 1
+            return count_triangles_sparse(nbrs, edges, edge_batch=p.edge_batch)
+
+        return jax.jit(body)
+
+    def _run_ring(self, g, p: Plan):
+        from repro.core.dynamic_pipeline import DynamicPipeline, run_sequential
+        from repro.core.partition import stage_costs
+        from repro.core.triangle_pipeline import build_dense_ring_operands, dense_ring_spec
+
+        # pad_to a power-of-two per-stage row count: same-bucket graphs share
+        # the block shapes, hence the compiled ring
+        pad_to = bucket(max(-(-g.n_nodes // p.n_stages), 1), minimum=8)
+        part, blocks = build_dense_ring_operands(g, p.n_stages, balance=p.balance,
+                                                 pad_to=pad_to)
+        spec = dense_ring_spec(part.rows_per_stage, use_kernel=p.use_kernel,
+                               interpret=p.interpret)
+        blocks = jnp.asarray(blocks)
+        key = (p.cache_key(), ("ring", p.n_stages, part.rows_per_stage))
+        if self._mesh_matches(p.n_stages):
+            entry = self._entry(key, lambda e: self._mark_traced(
+                e, DynamicPipeline(self.mesh, self.mesh.axis_names[0]).jit(spec)))
+            out = entry.fn(blocks, blocks)
+        else:
+            entry = self._entry(key, lambda e: self._mark_traced(
+                e, lambda r, s: run_sequential(spec, r, s, p.n_stages)))
+            out = entry.fn(blocks, blocks)
+        return out, {"cache": self._cache_stats(key, entry),
+                     "stage_costs": stage_costs(g, part).tolist()}
+
+    def _run_bitset_ring(self, g, p: Plan):
+        from repro.core.dynamic_pipeline import DynamicPipeline, run_sequential
+        from repro.core.partition import stage_costs
+        from repro.core.triangle_pipeline import bitset_ring_spec, build_bitset_ring_operands
+
+        pad_to = bucket(max(-(-g.n_nodes // p.n_stages), 1), minimum=8)
+        edge_block = bucket(max(-(-g.n_edges // p.n_stages), 1), minimum=128)
+        part, masks, edges = build_bitset_ring_operands(
+            g, p.n_stages, balance=p.balance, pad_to=pad_to, edge_block=edge_block)
+        spec = bitset_ring_spec(use_kernel=p.use_kernel, interpret=p.interpret)
+        masks, edges = jnp.asarray(masks), jnp.asarray(edges)
+        key = (p.cache_key(), ("bitset", p.n_stages) + tuple(masks.shape) + tuple(edges.shape))
+        if self._mesh_matches(p.n_stages):
+            entry = self._entry(key, lambda e: self._mark_traced(
+                e, DynamicPipeline(self.mesh, self.mesh.axis_names[0]).jit(spec)))
+        else:
+            entry = self._entry(key, lambda e: self._mark_traced(
+                e, lambda r, s: run_sequential(spec, r, s, p.n_stages)))
+        out = entry.fn(masks, edges)
+        return out, {"cache": self._cache_stats(key, entry),
+                     "stage_costs": stage_costs(g, part).tolist()}
+
+    def _mesh_matches(self, n_stages: int) -> bool:
+        # shard_map requires leading dim == device count; any mismatch (e.g.
+        # the planner capped stages below the ring width for a tiny graph)
+        # falls back to the sequential chain emulation instead of failing.
+        return (self.mesh is not None and self.mesh.devices.size > 1
+                and self.mesh.devices.size == n_stages)
+
+    @staticmethod
+    def _mark_traced(entry: _Entry, fn):
+        # The ring runtimes memoize their own trace (run_sequential /
+        # DynamicPipeline.jit); a fresh cache entry stands for one trace.
+        entry.traces += 1
+        return fn
+
+    def _run_mapreduce(self, g, p: Plan):
+        from repro.core.triangle_mapreduce import build_mapreduce_operands
+
+        n_b = bucket(g.n_nodes)
+        if not jax.config.jax_enable_x64 and n_b * n_b > np.iinfo(np.int32).max:
+            # jnp.asarray silently downcasts the int64 keys to int32 without
+            # x64, so the u*base+v encoding (and the base² padding key) must
+            # stay below 2^31: clamp the bucket to the largest safe base.
+            cap = int(np.sqrt(np.iinfo(np.int32).max))  # 46340
+            if g.n_nodes > cap:
+                raise ValueError(
+                    f"mapreduce path needs jax_enable_x64 for n_nodes > {cap} "
+                    f"(pair keys overflow int32); got {g.n_nodes}")
+            n_b = cap
+        nbrs, keys, n = build_mapreduce_operands(g, key_base=n_b)
+        _, dmax = nbrs.shape
+        d_b = bucket(max(dmax, 1), minimum=8)
+        # bucket space: sentinel and key base both become n_b
+        nb = np.full((n_b, d_b), n_b, np.int64)
+        nb[:n, :dmax] = np.where(nbrs == n, n_b, nbrs)
+        m_b = bucket(max(g.n_edges, 1), minimum=256)
+        ks = np.full(m_b, np.int64(n_b) * n_b, np.int64)  # > any real key
+        ks[: g.n_edges] = keys
+        key = (p.cache_key(), (n_b, d_b, m_b))
+        entry = self._entry(key, lambda e: self._make_mapreduce(e, p, n_b))
+        return entry.fn(jnp.asarray(nb), jnp.asarray(ks)), \
+            {"cache": self._cache_stats(key, entry)}
+
+    def _make_mapreduce(self, entry: _Entry, p: Plan, n_b: int):
+        from repro.core.triangle_mapreduce import _mapreduce_count
+
+        def body(nbrs, keys):
+            entry.traces += 1
+            return _mapreduce_count(nbrs, keys, n=n_b, node_batch=p.node_batch)
+
+        return jax.jit(body)
+
+    def _run_stream(self, g, p: Plan):
+        # A memory-resident graph executed under a stream plan: feed its own
+        # edge list as blocks (differential-test path; real streams use
+        # count_stream). Shrink the block to the graph so the padded scan
+        # does not run 65536 phantom steps on a 100-edge input.
+        p_run = dataclasses.replace(
+            p, block_size=min(p.block_size, bucket(max(g.n_edges, 1), minimum=256)))
+        res = self.count_stream(g.n_nodes, [g.edges], plan=p_run)
+        return res.count, res.stats
+
+
+_DEFAULT: TriangleCounter | None = None
+
+
+def default_counter() -> TriangleCounter:
+    """Module-level counter shared by the ``count_triangles`` shim so casual
+    callers still get compile caching across calls."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = TriangleCounter()
+    return _DEFAULT
+
+
+_METHOD_ALIASES = {"bitset": "bitset_ring"}
+_PLAN_KWARGS = {"n_stages", "use_kernel", "interpret", "balance",
+                "edge_batch", "node_batch", "block_size"}
+
+
+def count_triangles(g, *, method: str = "auto", counter: TriangleCounter | None = None,
+                    **kw) -> int:
+    """DEPRECATED thin shim over :class:`TriangleCounter`.
+
+    Kept so existing call sites (`method="dense"|"sparse"|"ring"|"bitset"`)
+    keep working; new code should hold a ``TriangleCounter`` and consume
+    :class:`CountResult` (no forced host sync, inspectable plan).
+    ``method="auto"`` routes through the planner.
+    """
+    c = counter or default_counter()
+    if method == "auto":
+        return c.count(g).item()
+    method = _METHOD_ALIASES.get(method, method)
+    unknown = set(kw) - _PLAN_KWARGS
+    if unknown:
+        # exotic legacy kwargs (mesh=, sequential=, dtype=...) — fall through
+        # to the original per-method entry points untouched
+        from repro.core import triangle_pipeline as tp
+
+        legacy = {"ring": tp.count_triangles_ring,
+                  "bitset_ring": tp.count_triangles_bitset_ring}
+        if method in legacy:
+            return int(legacy[method](g, **kw))
+        raise TypeError(f"unsupported kwargs {sorted(unknown)} for method {method!r}")
+    p = Plan(method=method, reason=f"fixed method={method!r} via count_triangles shim", **kw)
+    return c.count(g, plan=p).item()

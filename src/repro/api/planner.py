@@ -1,0 +1,260 @@
+"""The planner: ``plan(GraphStats, Resources) -> Plan``.
+
+The paper's experimental finding is that the right Divide-and-Conquer shape
+depends on measurable input properties: density decides dense-matmul vs
+sorted-intersection, the replication factor Σ_v C(deg(v), 2) (Afrati–Ullman's
+MapReduce communication cost, materialized as Round-I output by
+``triangle_mapreduce``) decides whether MapReduce is even admissible, and
+memory fit decides whether the graph can be held at all or must be consumed
+as a stream. This module turns those properties into an inspectable,
+serializable :class:`Plan` instead of a hand-picked ``method=`` string.
+
+Cost units are relative work (operand elements touched, MXU-discounted for
+matmuls); they only need to ORDER the methods correctly per regime, not
+predict wall-clock. Memory predictions are bytes of live operands and are
+compared against ``Resources.memory_bytes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+# Every method the planner can emit; executed by api.counter.TriangleCounter.
+METHODS = ("dense", "ring", "sparse", "bitset_ring", "mapreduce", "stream")
+
+# MapReduce is inadmissible once Round-I output exceeds this multiple of the
+# input (the paper's dense-graph blowup: RF / m grows with density·n).
+MR_RF_FACTOR = 8
+# Relative per-element throughput discount for MXU matmul vs vector ops.
+_MXU_DISCOUNT = 1.0 / 64.0
+# Gather/popcount paths pay per-row DMA + address math on top of the word
+# count — without this the bitset ring would beat the MXU on dense graphs,
+# the opposite of what the hardware does.
+_GATHER_PENALTY = 4.0
+# Sequential scan penalty for the single-host streaming fold.
+_SEQ_PENALTY = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """The measurable input properties the planner decides on.
+
+    Constructed from a materialized graph via :meth:`from_graph`, or by hand
+    for graphs that only ever exist as a stream (``edges_in_memory=False``).
+    """
+
+    n_nodes: int
+    n_edges: int
+    replication_factor: int  # Σ_v C(deg(v), 2) — Afrati–Ullman comm. cost
+    max_degree: int
+    max_fwd_degree: int  # max forward degree under degree order (sparse row width)
+    edges_in_memory: bool = True
+
+    @property
+    def density(self) -> float:
+        n = self.n_nodes
+        return 0.0 if n < 2 else self.n_edges / (n * (n - 1) / 2)
+
+    @classmethod
+    def from_graph(cls, g) -> "GraphStats":
+        from repro.core.partition import forward_degrees
+        from repro.core.triangle_mapreduce import mapreduce_replication_factor
+        from repro.graphs.formats import degree_order
+
+        deg = g.degrees()
+        rf = mapreduce_replication_factor(g)
+        if g.n_edges:
+            md = int(forward_degrees(g, degree_order(g)).max())
+            dmax = int(deg.max())
+        else:
+            md = dmax = 0
+        return cls(
+            n_nodes=g.n_nodes,
+            n_edges=g.n_edges,
+            replication_factor=rf,
+            max_degree=dmax,
+            max_fwd_degree=md,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Resources:
+    """What the hardware offers: memory budget, ring width, kernel backend."""
+
+    memory_bytes: int = 4 << 30
+    n_devices: int = 1
+    backend: str = "cpu"  # "tpu" turns on the Pallas kernels (compiled mode)
+    max_stages: int | None = None  # defaults to n_devices
+
+    @classmethod
+    def detect(cls) -> "Resources":
+        import jax
+
+        try:
+            import os
+
+            mem = os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES")
+        except (ValueError, OSError, AttributeError):
+            mem = 4 << 30
+        return cls(memory_bytes=int(mem), n_devices=jax.local_device_count(),
+                   backend=jax.default_backend())
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An inspectable, serializable execution plan.
+
+    ``predicted_bytes`` / ``predicted_cost`` are the planner's estimates for
+    the chosen method; ``reason`` records why it won so benchmarks and the
+    serve loop can log the decision. Static execution knobs (batch sizes,
+    kernel switch) live here so ``(plan.cache_key(), shape bucket)`` keys the
+    compile cache.
+    """
+
+    method: str
+    n_stages: int = 1
+    use_kernel: bool = False
+    interpret: bool = True
+    balance: bool = True
+    edge_batch: int = 4096  # sparse intersection batch
+    node_batch: int = 256  # mapreduce reducer batch
+    block_size: int = 65536  # streaming ingest block
+    predicted_bytes: int = 0
+    predicted_cost: float = 0.0
+    reason: str = ""
+
+    def cache_key(self) -> tuple:
+        """The static part of the compile-cache key (shape bucket is added
+        by the counter)."""
+        return (self.method, self.n_stages, self.use_kernel, self.interpret,
+                self.balance, self.edge_batch, self.node_batch, self.block_size)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_json(cls, s: str) -> "Plan":
+        return cls.from_dict(json.loads(s))
+
+
+def _choose_n_stages(stats: GraphStats, res: Resources) -> int:
+    """``partition.choose_n_stages`` on stats: never more stages than
+    devices, never fewer than 8 rows per stage."""
+    from repro.core.partition import choose_n_stages_for
+
+    return choose_n_stages_for(stats.n_nodes, res.max_stages or res.n_devices)
+
+
+def _predict(stats: GraphStats, res: Resources, method: str, n_stages: int) -> tuple[int, float]:
+    """(bytes, cost) of running ``method`` on ``stats``."""
+    n = max(stats.n_nodes, 1)
+    m = max(stats.n_edges, 1)
+    md = max(stats.max_fwd_degree, 1)
+    dmax = max(stats.max_degree, 1)
+    w = -(-n // 32)  # bitset words per row
+    if method == "dense":
+        # f32 U + f32 product + int32 mask, all (n, n)
+        return 12 * n * n, float(n) ** 3 * _MXU_DISCOUNT
+    if method == "ring":
+        # uint8 blocks stream (1 B/entry) + resident block + wide partials
+        return 3 * n * n, float(n) ** 3 * _MXU_DISCOUNT / max(1, min(n_stages, res.n_devices))
+    if method == "sparse":
+        return 4 * n * md + 8 * m, float(m) * md * _GATHER_PENALTY
+    if method == "bitset_ring":
+        # masks total n_pad²/8 + int32 edge stream
+        return n * w * 4 + 8 * m, float(m) * w * _GATHER_PENALTY
+    if method == "mapreduce":
+        # padded symmetric adjacency + Round-I pair enumeration work
+        return 8 * n * dmax + 8 * m, float(n) * dmax * dmax + float(stats.replication_factor)
+    if method == "stream":
+        # adjacency-so-far bitset, independent of stream length
+        return n * w * 4, float(m) * w * _SEQ_PENALTY
+    raise ValueError(f"unknown method {method!r}")
+
+
+def plan(stats: GraphStats, resources: Resources | None = None, *,
+         allow: set[str] | None = None) -> Plan:
+    """Choose the counting method for ``stats`` under ``resources``.
+
+    ``allow`` restricts the candidate set (e.g. ``{"mapreduce"}`` to force the
+    baseline for a comparison run); default is every method, with ``stream``
+    reserved for graphs that are not memory-resident. The winner is the
+    memory-feasible candidate with the lowest predicted cost; if nothing fits,
+    the smallest-footprint candidate is returned with a warning reason.
+    """
+    res = resources or Resources()
+    allowed = set(allow) if allow is not None else set(METHODS)
+    unknown = allowed - set(METHODS)
+    if unknown:
+        raise ValueError(f"unknown methods {sorted(unknown)}; valid: {METHODS}")
+
+    if not stats.edges_in_memory:
+        # The paper's "dynamically generated / does not fit" regime: the only
+        # executable shape is the streaming fold over edge blocks.
+        if allow is not None and "stream" not in allowed:
+            raise ValueError("graph is not memory-resident; only 'stream' can run")
+        nbytes, cost = _predict(stats, res, "stream", 1)
+        fits = nbytes <= res.memory_bytes
+        return Plan(
+            method="stream", predicted_bytes=nbytes, predicted_cost=cost,
+            use_kernel=False, interpret=res.backend != "tpu",
+            reason="edges not memory-resident -> streaming bitset fold"
+                   + ("" if fits else " (WARNING: bitset state exceeds memory budget)"),
+        )
+    if allow is None:
+        allowed.discard("stream")  # stream is for non-resident inputs only
+
+    n_stages = _choose_n_stages(stats, res)
+    rf_blowup = stats.replication_factor > MR_RF_FACTOR * max(stats.n_edges, 1)
+    notes = []
+    if rf_blowup and "mapreduce" in allowed and len(allowed) > 1:
+        # Afrati–Ullman: Round-I output RF >> input — the paper's dense-graph
+        # MapReduce blowup. Never auto-pick it; explicit allow={'mapreduce'}
+        # still runs (comparison baselines need the losing side too).
+        allowed.discard("mapreduce")
+        notes.append(f"mapreduce dropped: RF={stats.replication_factor} "
+                     f"> {MR_RF_FACTOR}x edges")
+
+    candidates = []
+    for method in METHODS:  # METHODS order is the tie-break preference
+        if method not in allowed:
+            continue
+        stages = n_stages if method in ("ring", "bitset_ring") else 1
+        nbytes, cost = _predict(stats, res, method, stages)
+        candidates.append((method, stages, nbytes, cost))
+    if not candidates:
+        raise ValueError("no candidate methods allowed")
+
+    fitting = [c for c in candidates if c[2] <= res.memory_bytes]
+    if fitting:
+        method, stages, nbytes, cost = min(fitting, key=lambda c: c[3])
+        reason = (f"min predicted cost among {len(fitting)} memory-fitting "
+                  f"candidate(s)")
+    else:
+        method, stages, nbytes, cost = min(candidates, key=lambda c: c[2])
+        reason = "WARNING: nothing fits the memory budget; smallest footprint"
+    if notes:
+        reason += "; " + "; ".join(notes)
+    if rf_blowup and method == "mapreduce":
+        reason += (f"; WARNING: RF={stats.replication_factor} blowup — "
+                   f"forced baseline")
+    return Plan(
+        method=method, n_stages=stages,
+        use_kernel=res.backend == "tpu", interpret=res.backend != "tpu",
+        predicted_bytes=int(nbytes), predicted_cost=float(cost), reason=reason,
+    )
+
+
+def plan_for_graph(g, resources: Resources | None = None, *,
+                   allow: set[str] | None = None) -> Plan:
+    """Convenience: measure ``g`` then :func:`plan`."""
+    return plan(GraphStats.from_graph(g), resources, allow=allow)

@@ -101,10 +101,16 @@ def stage_costs(g: Graph, part: RingPartition) -> np.ndarray:
     return per_rank.reshape(part.n_stages, part.rows_per_stage).sum(axis=1)
 
 
+def choose_n_stages_for(n_nodes: int, max_stages: int, *, min_rows_per_stage: int = 8) -> int:
+    """``choose_n_stages`` on a bare node count (what the api planner has
+    when the graph only exists as stats)."""
+    return int(max(1, min(max_stages, n_nodes // min_rows_per_stage or 1)))
+
+
 def choose_n_stages(g: Graph, max_stages: int, *, min_rows_per_stage: int = 8) -> int:
     """Adaptive stage count — the TPU analogue of the pipeline growing/shrinking.
 
     Small inputs use fewer stages (less ring latency); never more stages than
     rows to fill. Mirrors the paper's |V|-1 upper bound on filter count.
     """
-    return int(max(1, min(max_stages, g.n_nodes // min_rows_per_stage or 1)))
+    return choose_n_stages_for(g.n_nodes, max_stages, min_rows_per_stage=min_rows_per_stage)

@@ -31,10 +31,21 @@ def init_state(n_nodes: int) -> dict:
     }
 
 
+# Retrace telemetry: the traced-function body runs once per (shape, dtype)
+# specialization, so this counts compiles, not calls. With ``padded_blocks``
+# feeding fixed-shape blocks, one stream takes exactly one trace.
+_INGEST_TRACES = [0]
+
+
+def ingest_trace_count() -> int:
+    return _INGEST_TRACES[0]
+
+
 @partial(jax.jit, static_argnames=())
 def ingest_block(state: dict, edges: jax.Array) -> dict:
     """Fold one (B, 2) int32 edge block (phantom rows: id >= n_nodes).
     Duplicate edges are ignored (the paper's simple-graph precondition)."""
+    _INGEST_TRACES[0] += 1
     n = state["adj"].shape[0]
 
     def one(carry, uv):
@@ -59,11 +70,36 @@ def ingest_block(state: dict, edges: jax.Array) -> dict:
     return {"adj": adj, "count": count}
 
 
-def count_stream(n_nodes: int, blocks) -> int:
-    """Consume an iterable of (B, 2) numpy edge blocks; returns the exact
-    triangle count without ever materializing the full edge list."""
-    state = init_state(n_nodes)
+def padded_blocks(blocks, n_nodes: int, block_size: int | None = None):
+    """Normalize an iterable of (B, 2) edge blocks to ONE fixed block shape.
+
+    ``ingest_block`` retraces per distinct block shape, so a stream whose
+    trailing block is partial (or whose producer emits ragged blocks) pays an
+    extra compile per shape. This pads every block to ``block_size`` rows
+    with phantom edges (id = n_nodes, which ``ingest_block`` already treats
+    as invalid) and splits oversized blocks, so exactly one trace is ever
+    taken. ``block_size=None`` adopts the first block's size.
+    """
     for block in blocks:
-        b = np.asarray(block, dtype=np.int32)
-        state = ingest_block(state, jnp.asarray(b))
+        b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
+        if len(b) == 0:
+            continue
+        if block_size is None:
+            block_size = len(b)
+        for i in range(0, len(b), block_size):
+            chunk = b[i:i + block_size]
+            if len(chunk) < block_size:
+                pad = np.full((block_size - len(chunk), 2), n_nodes, np.int32)
+                chunk = np.concatenate([chunk, pad])
+            yield jnp.asarray(chunk)
+
+
+def count_stream(n_nodes: int, blocks, *, block_size: int | None = None) -> int:
+    """Consume an iterable of (B, 2) numpy edge blocks; returns the exact
+    triangle count without ever materializing the full edge list. Blocks are
+    padded to one fixed shape (see ``padded_blocks``) so the whole stream
+    compiles once."""
+    state = init_state(n_nodes)
+    for block in padded_blocks(blocks, n_nodes, block_size):
+        state = ingest_block(state, block)
     return int(state["count"])

@@ -30,8 +30,14 @@ from repro.utils import count_dtype
 from repro.graphs.formats import Graph
 
 
-def build_mapreduce_operands(g: Graph, *, max_deg: int | None = None) -> tuple[np.ndarray, np.ndarray, int]:
-    """Symmetric padded adjacency (n, dmax) + sorted edge keys (m,)."""
+def build_mapreduce_operands(g: Graph, *, max_deg: int | None = None,
+                             key_base: int | None = None) -> tuple[np.ndarray, np.ndarray, int]:
+    """Symmetric padded adjacency (n, dmax) + sorted edge keys (m,).
+
+    ``key_base`` overrides the base of the (u, v) -> u*base + v key encoding
+    (default: n). Callers that re-pad the operands into a larger padded node
+    space (the api counter's shape buckets) pass their bucket size so the
+    keys are built — and sorted — once."""
     n = g.n_nodes
     deg = g.degrees()
     dmax = int(deg.max()) if len(deg) else 1
@@ -46,7 +52,8 @@ def build_mapreduce_operands(g: Graph, *, max_deg: int | None = None) -> tuple[n
     starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
     col = np.arange(len(src)) - starts[src]
     nbrs[src, col] = dst
-    keys = np.sort(g.edges[:, 0].astype(np.int64) * n + g.edges[:, 1].astype(np.int64))
+    base = n if key_base is None else key_base
+    keys = np.sort(g.edges[:, 0].astype(np.int64) * base + g.edges[:, 1].astype(np.int64))
     return nbrs, keys, n
 
 

@@ -26,7 +26,7 @@ import numpy as np
 from repro.utils import count_dtype
 from repro.core.dynamic_pipeline import DynamicPipeline, FilterSpec, run_sequential
 from repro.core.partition import RingPartition, ring_partition
-from repro.graphs.formats import Graph, degree_order, forward_adjacency_dense, forward_adjacency_padded
+from repro.graphs.formats import Graph
 
 
 # --------------------------------------------------------------------------
@@ -216,9 +216,10 @@ def bitset_ring_spec(*, use_kernel: bool = False, interpret: bool = True) -> Fil
 
 
 def build_bitset_ring_operands(
-    g: Graph, n_stages: int, *, balance: bool = True, edge_block: int | None = None
+    g: Graph, n_stages: int, *, balance: bool = True, edge_block: int | None = None,
+    pad_to: int = 1
 ) -> tuple[RingPartition, np.ndarray, np.ndarray]:
-    part = ring_partition(g, n_stages, balance=balance)
+    part = ring_partition(g, n_stages, balance=balance, pad_to=pad_to)
     R, n_pad = part.rows_per_stage, part.n_pad
     W = -(-R // 32)
     ru = part.rank[g.edges[:, 0]]
@@ -262,19 +263,12 @@ def count_triangles_bitset_ring(
 # Host conveniences
 # --------------------------------------------------------------------------
 def count_triangles(g: Graph, *, method: str = "dense", **kw) -> int:
-    """Front door used by examples/benches."""
-    if method == "dense":
-        u = jnp.asarray(forward_adjacency_dense(g))
-        return int(count_triangles_dense(u, **kw))
-    if method == "sparse":
-        rank = degree_order(g)
-        nbrs, _ = forward_adjacency_padded(g, rank)
-        ru = rank[g.edges[:, 0]]
-        rv = rank[g.edges[:, 1]]
-        edges = np.stack([np.minimum(ru, rv), np.maximum(ru, rv)], axis=1)
-        return int(count_triangles_sparse(jnp.asarray(nbrs), jnp.asarray(edges), **kw))
-    if method == "ring":
-        return count_triangles_ring(g, **kw)
-    if method == "bitset":
-        return count_triangles_bitset_ring(g, **kw)
-    raise ValueError(f"unknown method {method!r}")
+    """DEPRECATED front door — now a thin shim over ``repro.api``.
+
+    Routes through the shared planner-driven ``TriangleCounter`` (compile
+    cache, ``CountResult`` contract); ``method="auto"`` lets the planner
+    choose. New code should use ``repro.api.TriangleCounter`` directly.
+    """
+    from repro.api import count_triangles as _api_count_triangles
+
+    return _api_count_triangles(g, method=method, **kw)

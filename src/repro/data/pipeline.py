@@ -58,11 +58,23 @@ class GraphStreamPipeline:
     seed: int = 0
 
     def edge_stream(self, block_size: int = 65536):
-        from repro.graphs.generators import gnp
+        """Yield (≤block_size, 2) int32 edge blocks, each independently
+        shuffled with a per-block seed. Generation is row-blocked
+        (``gnp_edge_blocks``) and buffering is bounded by one emitted block
+        plus one generator row block, so peak host memory is O(block_size)
+        — the full edge list is never materialized, matching the docstring
+        contract above (the seed implementation permuted the whole list)."""
+        from repro.graphs.generators import gnp_edge_blocks
 
-        g = gnp(self.n_nodes, self.density, seed=self.seed)
-        edges = g.edges
-        perm = np.random.default_rng(self.seed).permutation(len(edges))
-        edges = edges[perm]
-        for i in range(0, len(edges), block_size):
-            yield edges[i : i + block_size]
+        buf = np.zeros((0, 2), np.int32)
+        out_idx = 0
+        for chunk in gnp_edge_blocks(self.n_nodes, self.density, seed=self.seed):
+            buf = np.concatenate([buf, chunk.astype(np.int32)])
+            while len(buf) >= block_size:
+                block, buf = buf[:block_size], buf[block_size:]
+                rng = np.random.default_rng((self.seed, out_idx))
+                yield block[rng.permutation(block_size)]
+                out_idx += 1
+        if len(buf):
+            rng = np.random.default_rng((self.seed, out_idx))
+            yield buf[rng.permutation(len(buf))]

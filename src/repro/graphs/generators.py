@@ -13,11 +13,14 @@ import numpy as np
 from repro.graphs.formats import Graph, canonical_edges
 
 
-def gnp(n: int, p: float, seed: int = 0) -> Graph:
-    """G(n, p): each of the n(n-1)/2 edges present independently w.p. p."""
+def gnp_edge_blocks(n: int, p: float, seed: int = 0):
+    """Row-block edge generator behind ``gnp``: yields each row block's (B, 2)
+    canonical edges without ever materializing the full edge list. The rng
+    call sequence is identical to ``gnp``'s, so consuming the whole stream
+    reproduces exactly ``gnp(n, p, seed).edges`` — the streaming regime sees
+    the same graph the resident paths do."""
     rng = np.random.default_rng(seed)
     # Row-block construction to bound peak memory at O(block * n).
-    blocks = []
     block = max(1, min(n, int(4e7 // max(n, 1))))
     for r0 in range(0, n, block):
         r1 = min(n, r0 + block)
@@ -25,7 +28,12 @@ def gnp(n: int, p: float, seed: int = 0) -> Graph:
         rows, cols = np.nonzero(mask)
         rows = rows + r0
         keep = cols > rows  # upper triangle only
-        blocks.append(np.stack([rows[keep], cols[keep]], axis=1))
+        yield np.stack([rows[keep], cols[keep]], axis=1)
+
+
+def gnp(n: int, p: float, seed: int = 0) -> Graph:
+    """G(n, p): each of the n(n-1)/2 edges present independently w.p. p."""
+    blocks = list(gnp_edge_blocks(n, p, seed=seed))
     edges = np.concatenate(blocks, axis=0) if blocks else np.zeros((0, 2), np.int64)
     return Graph(edges=edges.astype(np.int32), n_nodes=n)
 

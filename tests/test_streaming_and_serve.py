@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.streaming import count_stream, ingest_block, init_state
+from repro.api import TriangleCounter
+from repro.core.streaming import count_stream, ingest_block, init_state, ingest_trace_count
 from repro.core.triangle_ref import count_triangles_brute
 from repro.data.pipeline import GraphStreamPipeline
 from repro.graphs import generators as gen
@@ -23,7 +24,11 @@ def test_streaming_count_exact_any_blocking(n, p, seed, block):
     dups = edges[rng.integers(0, max(g.n_edges, 1), size=min(5, g.n_edges))] if g.n_edges else edges
     stream = np.concatenate([edges, dups]) if g.n_edges else edges
     blocks = [stream[i : i + block] for i in range(0, len(stream), block)]
+    before = ingest_trace_count()
     assert count_stream(n, blocks) == count_triangles_brute(g)
+    # ragged trailing blocks are padded to one fixed shape: at most one trace
+    # per stream regardless of block/edge-count arithmetic
+    assert ingest_trace_count() - before <= 1
 
 
 def test_streaming_from_pipeline():
@@ -31,6 +36,9 @@ def test_streaming_from_pipeline():
     got = count_stream(200, pipe.edge_stream(block_size=1000))
     want = count_triangles_brute(gen.gnp(200, 0.2, seed=3))
     assert got == want
+    # the unified API consumes the same stream behind the CountResult contract
+    res = TriangleCounter().count_stream(200, pipe.edge_stream(block_size=1000))
+    assert res.item() == want and res.plan.method == "stream"
 
 
 def test_serve_loop_matches_stepwise_forward():

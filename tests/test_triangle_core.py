@@ -4,9 +4,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.api import count_triangles  # the unified front door (shim-compatible)
 from repro.core.triangle_ref import count_triangles_brute, count_triangles_dense_ref
 from repro.core.triangle_pipeline import (
-    count_triangles,
     count_triangles_bitset_ring,
     count_triangles_dense,
     count_triangles_ring,

@@ -122,6 +122,49 @@ def bench_kernels(*, quick: bool = False, reps: int | None = None) -> list[dict]
     # counter_bench's reps means "number of benchmark graphs", not timing
     # repetitions — let it use its own defaults (4 quick / 8 full)
     records += counter_bench(quick=quick)
+    records += stream_bench(quick=quick)
+    return records
+
+
+def stream_bench(*, quick: bool = False, reps: int | None = None) -> list[dict]:
+    """Streaming-ingest trajectory on a 65k-edge stream: the seed per-edge
+    ``lax.scan`` fold vs the two-phase blocked ingest vs the ring-sharded
+    (4-stage, host-emulated) variant. ``grid_steps`` records sequential scan
+    steps for the oracle and ingest dispatches (× stages when sharded) for
+    the blocked paths — the blocked ingest collapses 65k dependent steps into
+    8 dispatches, which is the whole point."""
+    from repro.core.streaming import count_stream, count_stream_per_edge
+
+    reps = reps or (3 if quick else 5)
+    n, block = 2048, 8192
+    # ~65k edges: the ISSUE's stream_bench case (density ≈ 65536 / C(n, 2))
+    g = gen.gnp(n, 65536 / (n * (n - 1) / 2), seed=65)
+    rng = np.random.default_rng(65)
+    edges = g.edges[rng.permutation(g.n_edges)]
+    blocks = [edges[i:i + block] for i in range(0, len(edges), block)]
+    n_blocks = -(-len(edges) // block)
+    stages = 4
+    shape = f"n{n}/m{len(edges)}/b{block}"
+
+    runs = (
+        # the oracle is the slow side: one timing rep keeps --quick usable
+        ("per_edge_scan_seed", lambda: count_stream_per_edge(n, blocks), 1,
+         n_blocks * block),
+        ("blocked_ingest", lambda: count_stream(n, blocks), reps, n_blocks),
+        ("sharded_ring_s4", lambda: count_stream(n, blocks, n_stages=stages),
+         reps, n_blocks * stages),
+    )
+    want = None
+    records = []
+    for method, fn, r, steps in runs:
+        got = fn()
+        want = got if want is None else want
+        assert got == want, (method, got, want)  # cross-check while timing
+        ms = _median_ms(fn, reps=r)
+        records.append({
+            "op": "stream_ingest", "shape": shape, "method": method,
+            "median_ms": round(ms, 3), "grid_steps": steps,
+        })
     return records
 
 

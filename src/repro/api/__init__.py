@@ -24,7 +24,10 @@ Plan method → paper section map:
   ``MR_RF_FACTOR``× the input — the paper's dense-graph blowup.
 - ``stream``             — the "graph dynamically generated / does not fit in
   memory" regime (§1, §5 discussion): incremental bitset fold, each triangle
-  counted when its last edge arrives.
+  counted when its last edge arrives. Plans carry planner-sized
+  ``n_stages``/``block_size`` (``stream_sizing``): the two-phase blocked
+  ingest replaces the per-edge scan, and ``n_stages > 1`` column-shards the
+  adjacency state over the ring (n²/8/S bytes per device).
 
 ``count_triangles(g, method=...)`` survives as a deprecated shim over the
 default counter.
@@ -37,6 +40,7 @@ from repro.api.planner import (
     Resources,
     plan,
     plan_for_graph,
+    stream_sizing,
 )
 from repro.api.counter import (
     CountResult,
@@ -54,6 +58,7 @@ __all__ = [
     "Resources",
     "plan",
     "plan_for_graph",
+    "stream_sizing",
     "CountResult",
     "TriangleCounter",
     "bucket",

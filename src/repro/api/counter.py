@@ -121,30 +121,82 @@ class TriangleCounter:
                      plan: Plan | None = None,
                      block_size: int | None = None) -> CountResult:
         """Fold an iterable of (B, 2) edge blocks — ``core.streaming`` behind
-        the same result contract. Blocks are padded/split to one fixed size
-        (``block_size``, else the plan's if one was given, else the first
-        block's) so exactly one trace is ever taken."""
+        the same result contract.
+
+        The plan is resolved FIRST (argument, else the counter's fixed plan,
+        else the planner on not-memory-resident stats), so the planner's
+        ``block_size`` and ``n_stages`` actually apply; an explicit
+        ``block_size`` argument still overrides the plan's. Plans whose
+        method is not ``"stream"`` are rejected — silently streaming under a
+        dense/ring plan would ignore every knob the caller thought they set.
+        ``n_stages > 1`` runs the ring-sharded ingest (column-sharded
+        adjacency, n²/8/S bytes per stage) — on ``self.mesh`` when its size
+        matches, else host-emulated. The ingest step lives in this counter's
+        compile cache, so e.g. serve-loop streams share it across requests."""
         from repro.core import streaming
 
         p = plan or self.fixed_plan
-        if block_size is None and p is not None:
-            block_size = p.block_size
         if p is None:
             stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
                                max_degree=0, max_fwd_degree=0, edges_in_memory=False)
             p = plan_fn(stats, self.resources)
+        if p.method != "stream":
+            raise ValueError(
+                f"count_stream requires a plan with method='stream', got "
+                f"{p.method!r} — use count()/count_batch() for memory-resident "
+                f"plans, or drop the plan to let the planner size the stream")
+        if block_size is None:
+            block_size = p.block_size
         t0 = time.perf_counter()
         traces0 = streaming.ingest_trace_count()
-        state = streaming.init_state(n_nodes)
+        on_mesh = self._mesh_matches(p.n_stages)
+        key = (p.cache_key(), ("stream", n_nodes, block_size, on_mesh))
+        entry = self._entry(key, lambda e: self._make_stream(e, p, on_mesh))
+        if p.n_stages > 1:
+            state = streaming.init_sharded_state(n_nodes, p.n_stages)
+        else:
+            state = streaming.init_state(n_nodes)
         n_blocks = 0
         for b in streaming.padded_blocks(blocks, n_nodes, block_size=block_size):
-            state = streaming.ingest_block(state, b)
+            state = entry.fn(state, b)
             n_blocks += 1
         return CountResult(
             count=state["count"], plan=p, wall_s=time.perf_counter() - t0,
-            stats={"n_blocks": n_blocks,
+            stats={"n_blocks": n_blocks, "block_size": block_size,
+                   "n_stages": p.n_stages, "sharded": p.n_stages > 1,
+                   "on_mesh": on_mesh,
+                   "state_bytes": int(state["adj"].nbytes),
+                   "cache": self._cache_stats(key, entry),
                    "ingest_traces": streaming.ingest_trace_count() - traces0},
         )
+
+    def _make_stream(self, entry: _Entry, p: Plan, on_mesh: bool):
+        from functools import partial as _partial
+
+        from repro.core import streaming
+
+        # The ingest fns are module-level jits (shared across counters); a
+        # fresh cache entry stands for at most one trace per fixed-shape
+        # stream (see streaming.ingest_trace_count for the exact telemetry).
+        entry.traces += 1
+        if p.n_stages > 1:
+            if on_mesh:
+                return streaming.make_mesh_ingest(
+                    self.mesh, use_kernel=p.use_kernel, interpret=p.interpret)
+            return streaming.ingest_block_sharded
+        return _partial(streaming.ingest_block, use_kernel=p.use_kernel,
+                        interpret=p.interpret)
+
+    def batch_plan(self) -> Plan:
+        """The dense plan ``count_batch`` runs when none is given: derived
+        from ``self.resources`` so the backend decision (compiled Pallas
+        kernels on TPU vs interpret-mode XLA elsewhere) carries into batched
+        serving instead of silently reverting to the Plan defaults."""
+        from repro.api.planner import backend_exec_flags
+
+        res = self.resources
+        return Plan(method="dense", **backend_exec_flags(res),
+                    reason=f"batched dense path ({res.backend} backend)")
 
     def count_batch(self, graphs: list, *, plan: Plan | None = None) -> CountResult:
         """Vmapped dense path over many small graphs: one compiled executable
@@ -154,7 +206,11 @@ class TriangleCounter:
 
         if not graphs:
             raise ValueError("empty batch")
-        p = plan or Plan(method="dense", reason="batched dense path")
+        p = plan or self.batch_plan()
+        if p.method != "dense":
+            raise ValueError(
+                f"count_batch is the vmapped dense path; got a plan with "
+                f"method={p.method!r}")
         t0 = time.perf_counter()
         n_b = bucket(max(g.n_nodes for g in graphs))
         b_b = bucket(len(graphs), minimum=8)
@@ -162,7 +218,7 @@ class TriangleCounter:
         for i, g in enumerate(graphs):
             us[i, :g.n_nodes, :g.n_nodes] = forward_adjacency_dense(g)
         key = (("batch_dense",) + p.cache_key(), (b_b, n_b))
-        entry = self._entry(key, self._make_batch_dense)
+        entry = self._entry(key, lambda e: self._make_batch_dense(e, p))
         counts = entry.fn(jnp.asarray(us))[: len(graphs)]
         return CountResult(
             count=counts, plan=p, wall_s=time.perf_counter() - t0,
@@ -194,12 +250,13 @@ class TriangleCounter:
 
         return jax.jit(body)
 
-    def _make_batch_dense(self, entry: _Entry):
+    def _make_batch_dense(self, entry: _Entry, p: Plan):
         from repro.core.triangle_pipeline import count_triangles_dense
 
         def body(us):
             entry.traces += 1
-            return jax.vmap(count_triangles_dense)(us)
+            return jax.vmap(lambda u: count_triangles_dense(
+                u, use_kernel=p.use_kernel, interpret=p.interpret))(us)
 
         return jax.jit(body)
 

@@ -33,8 +33,16 @@ _MXU_DISCOUNT = 1.0 / 64.0
 # count — without this the bitset ring would beat the MXU on dense graphs,
 # the opposite of what the hardware does.
 _GATHER_PENALTY = 4.0
-# Sequential scan penalty for the single-host streaming fold.
-_SEQ_PENALTY = 8.0
+# The blocked streaming ingest runs three gather+popcount families per edge
+# (pre-block closures + the two intra-block correction terms), so a resident
+# graph forced through the stream path still costs ~3x the bitset ring.
+_STREAM_PENALTY = 3.0
+# Streaming block sizing: never pad tiny streams past the floor, never trace
+# a block larger than the cap, and keep the block working set within this
+# fraction of the memory budget.
+_STREAM_BLOCK_MIN = 4096
+_STREAM_BLOCK_MAX = 1 << 20
+_STREAM_BLOCK_MEM_FRACTION = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,8 +185,41 @@ def _predict(stats: GraphStats, res: Resources, method: str, n_stages: int) -> t
         return 8 * n * dmax + 8 * m, float(n) * dmax * dmax + float(stats.replication_factor)
     if method == "stream":
         # adjacency-so-far bitset, independent of stream length
-        return n * w * 4, float(m) * w * _SEQ_PENALTY
+        return n * w * 4, float(m) * w * _GATHER_PENALTY * _STREAM_PENALTY
     raise ValueError(f"unknown method {method!r}")
+
+
+def stream_sizing(stats: GraphStats, res: Resources) -> tuple[int, int, int]:
+    """(n_stages, block_size, shard_bytes) for a stream plan.
+
+    n_stages: smallest ring width whose per-stage column shard of the
+    adjacency bitset (n · ceil(W/S) · 4 ≈ n²/8/S bytes) fits the memory
+    budget, capped at the ring width (``max_stages`` or ``n_devices``).
+    block_size: largest power of two in [4k, 1M] whose ingest working set
+    (~8 gathered word-rows per edge) stays within 1/8 of the budget — big
+    blocks amortize dispatch, but must not evict the state shard."""
+    n = max(stats.n_nodes, 1)
+    w = -(-n // 32)
+    max_stages = max(1, res.max_stages or res.n_devices)
+    n_stages = 1
+    while n_stages < max_stages and 4 * n * (-(-w // n_stages)) > res.memory_bytes:
+        n_stages += 1
+    shard_bytes = 4 * n * (-(-w // n_stages))
+    per_edge_bytes = 8 * 4 * (-(-w // n_stages)) + 8
+    budget = max(res.memory_bytes // _STREAM_BLOCK_MEM_FRACTION, 1 << 20)
+    block_size = _STREAM_BLOCK_MIN
+    while block_size < _STREAM_BLOCK_MAX and 2 * block_size * per_edge_bytes <= budget:
+        block_size *= 2
+    return n_stages, block_size, shard_bytes
+
+
+def backend_exec_flags(res: Resources) -> dict:
+    """The backend decision every executable plan carries: compiled Pallas
+    kernels on TPU, interpret-mode XLA elsewhere. One definition so the
+    planner's stream/resident branches and the counter's batch plan cannot
+    drift apart."""
+    return {"use_kernel": res.backend == "tpu",
+            "interpret": res.backend != "tpu"}
 
 
 def plan(stats: GraphStats, resources: Resources | None = None, *,
@@ -203,12 +244,18 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
         if allow is not None and "stream" not in allowed:
             raise ValueError("graph is not memory-resident; only 'stream' can run")
         nbytes, cost = _predict(stats, res, "stream", 1)
-        fits = nbytes <= res.memory_bytes
+        n_stages, block_size, shard_bytes = stream_sizing(stats, res)
+        fits = shard_bytes <= res.memory_bytes
+        shape = (f"ring-sharded ({n_stages} stages, ~{shard_bytes >> 20} MB/stage) "
+                 if n_stages > 1 else "")
         return Plan(
-            method="stream", predicted_bytes=nbytes, predicted_cost=cost,
-            use_kernel=False, interpret=res.backend != "tpu",
-            reason="edges not memory-resident -> streaming bitset fold"
-                   + ("" if fits else " (WARNING: bitset state exceeds memory budget)"),
+            method="stream", n_stages=n_stages, block_size=block_size,
+            predicted_bytes=nbytes, predicted_cost=cost,
+            **backend_exec_flags(res),
+            reason=f"edges not memory-resident -> {shape}streaming bitset fold"
+                   + ("" if fits else
+                      " (WARNING: bitset state shard exceeds memory budget even "
+                      f"at the full ring width {n_stages})"),
         )
     if allow is None:
         allowed.discard("stream")  # stream is for non-resident inputs only
@@ -248,8 +295,7 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
         reason += (f"; WARNING: RF={stats.replication_factor} blowup — "
                    f"forced baseline")
     return Plan(
-        method=method, n_stages=stages,
-        use_kernel=res.backend == "tpu", interpret=res.backend != "tpu",
+        method=method, n_stages=stages, **backend_exec_flags(res),
         predicted_bytes=int(nbytes), predicted_cost=float(cost), reason=reason,
     )
 

@@ -123,6 +123,53 @@ class DynamicPipeline:
         return self._jit_cache[spec]
 
 
+class ShardedStateStream:
+    """Persistent sharded-state stream fold: the pipeline's stage axis reused
+    to shard a stream consumer's STATE instead of its input.
+
+    ``ring_stream`` rotates resident blocks through the stages; here the state
+    stays put — each stage owns one leading-axis shard of it — and every
+    streamed block is broadcast to all stages, which fold it into their shard
+    concurrently. Cross-shard terms are the step function's responsibility
+    (psum over ``axis_name``). Used by ``core.streaming`` for the
+    column-sharded adjacency bitset (n²/8/S bytes per device).
+    """
+
+    def __init__(self, mesh: Mesh, axis_name: str = "stage"):
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis_name!r}")
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.n_stages = mesh.shape[axis_name]
+        self._jit_cache: dict[Any, Any] = {}
+
+    def jit_step(self, step_fn: Callable[[Any, Any, Any], tuple[Any, Any]]):
+        """Jit ``step_fn(state_local, carry, block) -> (state_local, carry)``
+        under shard_map: every ``state`` leaf is sharded on its leading axis
+        (which must equal the ring width); ``carry`` and ``block`` are
+        replicated, and the returned carry must already be identical across
+        stages (psum inside the step). Memoized per step function so repeated
+        blocks of one stream reuse one compiled executable."""
+        if step_fn not in self._jit_cache:
+            ax = self.axis_name
+
+            def stage_fn(state_local, carry, block):
+                # shard_map gives block-local views with leading axis 1; drop
+                # it for the step and restore it for the out_spec.
+                state_local = jax.tree.map(lambda x: x[0], state_local)
+                state_local, carry = step_fn(state_local, carry, block)
+                return jax.tree.map(lambda x: x[None], state_local), carry
+
+            sharded = _shard_map(
+                stage_fn,
+                mesh=self.mesh,
+                in_specs=(P(ax), P(), P()),
+                out_specs=(P(ax), P()),
+            )
+            self._jit_cache[step_fn] = jax.jit(sharded)
+        return self._jit_cache[step_fn]
+
+
 # Bounded: FilterSpecs from the memoized constructors recur (cache hits), but
 # hand-built specs are new keys per call and must not pin compiled
 # executables forever.

@@ -3,18 +3,37 @@ does not fit in memory" regime, as an incremental API.
 
 A triangle is counted exactly once: when its LAST edge arrives. The state is
 the adjacency-so-far bitset (n, W) uint32 (n²/8 bytes — 8× under a dense f32
-matrix and independent of the stream length); each incoming edge (u, v)
-contributes popcount(adj[u] & adj[v]) — its wedge closures against everything
-seen so far — and is then inserted. Edges inside a block are folded
-sequentially with lax.scan so intra-block triangles are also exact.
+matrix and independent of the stream length).
 
-This is the single-host streaming twin of the bitset ring
-(`triangle_pipeline.count_triangles_bitset_ring`); `kernels/bitset_count`
-is its TPU hot-path for the closure step.
+Two ingest implementations share that contract:
+
+- ``ingest_block`` — the production path: a TWO-PHASE blocked ingest. Phase 1
+  closes every edge of the block against the PRE-BLOCK adjacency A in one
+  vectorized gather+popcount sweep (``kernels/bitset_count`` when
+  ``use_kernel``). Phase 2 adds the exact intra-block correction — triangles
+  whose last two edges share the block — from the block's own delta-adjacency
+  D: Σ_e pc(A[u]&D[v]) + pc(D[u]&A[v]) counts each (block, block, A) triangle
+  twice and Σ_e pc(D[u]&D[v]) counts each all-in-block triangle three times,
+  so the block's contribution is ``pre + mixed//2 + dd//3`` (A and D are
+  disjoint by dedup, so the terms never overlap). All insertions land in one
+  scatter. No per-edge sequential dependency remains.
+- ``ingest_block_per_edge`` — the seed per-edge ``lax.scan`` fold, RETAINED AS
+  THE DIFFERENTIAL ORACLE (and the BENCH_kernels.json ``stream_bench``
+  baseline): O(B) sequential steps per block, trivially correct.
+
+``init_sharded_state``/``ingest_block_sharded`` are the ring-sharded variant:
+the adjacency bitset is COLUMN-sharded over S pipeline stages (words
+[s·Ws, (s+1)·Ws) of every row live on stage s — n²/8/S bytes per device), so
+streamed graphs larger than one device's memory stay countable. Every
+popcount term above is a sum over words, so each stage computes its word
+shard's partial and the block total is psum-reduced; on a real mesh the step
+runs under shard_map via ``dynamic_pipeline.ShardedStateStream``
+(``make_mesh_ingest``), on a single host it is emulated with a vmap over the
+stage axis.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +41,30 @@ import numpy as np
 
 from repro.utils import count_dtype
 
+# The blocked-kernel path keeps the whole mask table VMEM-resident and the
+# edge endpoints in SMEM (see kernels/bitset_count); states that exceed the
+# budgets fall back to the pure-JAX gather+popcount sweep instead of failing
+# allocation. Mirrors triangle_pipeline's bitset-ring gating.
+_MASK_VMEM_BUDGET = 8 * 1024 * 1024
+_EDGE_SMEM_BUDGET = 256 * 1024
+
 
 def init_state(n_nodes: int) -> dict:
     w = -(-n_nodes // 32)
     return {
         "adj": jnp.zeros((n_nodes, w), jnp.uint32),
+        "count": jnp.zeros((), count_dtype()),
+    }
+
+
+def init_sharded_state(n_nodes: int, n_stages: int) -> dict:
+    """Column-sharded state: stage s owns words [s·Ws, (s+1)·Ws) of every
+    row — n·Ws·4 ≈ n²/8/S bytes per stage. The trailing pad words (W rounded
+    up to S·Ws) map to no node and stay zero forever."""
+    w = -(-n_nodes // 32)
+    ws = -(-w // n_stages)
+    return {
+        "adj": jnp.zeros((n_stages, n_nodes, ws), jnp.uint32),
         "count": jnp.zeros((), count_dtype()),
     }
 
@@ -41,10 +79,182 @@ def ingest_trace_count() -> int:
     return _INGEST_TRACES[0]
 
 
-@partial(jax.jit, static_argnames=())
-def ingest_block(state: dict, edges: jax.Array) -> dict:
-    """Fold one (B, 2) int32 edge block (phantom rows: id >= n_nodes).
-    Duplicate edges are ignored (the paper's simple-graph precondition)."""
+# --------------------------------------------------------------------------
+# Shared per-block math (unsharded = the off=0, full-width special case)
+# --------------------------------------------------------------------------
+def _canonical_live(edges: jax.Array, n: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(keep, lo, hi): canonicalized endpoints with self-loops/phantoms
+    invalidated (lo = hi = n) and within-block duplicates reduced to their
+    first occurrence. ``keep`` still needs the not-already-in-A check."""
+    e = edges.astype(jnp.int32)
+    u, v = e[:, 0], e[:, 1]
+    valid = (u < n) & (v < n) & (u != v)
+    lo = jnp.where(valid, jnp.minimum(u, v), n)
+    hi = jnp.where(valid, jnp.maximum(u, v), n)
+    order = jnp.lexsort((hi, lo))  # stable: first occurrence keeps block order
+    ls, hs = lo[order], hi[order]
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (ls[1:] == ls[:-1]) & (hs[1:] == hs[:-1])])
+    first = jnp.zeros(e.shape[0], bool).at[order].set(~dup)
+    return valid & first, lo, hi
+
+
+def _stage_seen(adj_s: jax.Array, lo: jax.Array, hi: jax.Array, off) -> jax.Array:
+    """Per-edge already-in-A bit, restricted to this stage's word shard
+    (exactly one stage owns word hi//32, so summing over stages recovers
+    the global bit)."""
+    n, ws = adj_s.shape
+    wl = hi // 32 - off
+    owned = (wl >= 0) & (wl < ws) & (lo < n)
+    word = adj_s[jnp.clip(lo, 0, n - 1), jnp.clip(wl, 0, ws - 1)]
+    bit = (word >> (hi % 32).astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.where(owned, bit, jnp.uint32(0))
+
+
+def _stage_update(adj_s: jax.Array, lo: jax.Array, hi: jax.Array,
+                  live: jax.Array, off, *, use_kernel: bool = False,
+                  interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """One stage's share of the two-phase block ingest.
+
+    Returns (new word shard, (pre, mixed, dd) partials). The caller combines
+    shards (psum / sum over the stage axis) BEFORE dividing: mixed counts
+    every (block, block, pre-block) triangle twice and dd every all-in-block
+    triangle three times, and those multiplicities only hold for the
+    full-width sums."""
+    n, ws = adj_s.shape
+
+    def owned_scatter(dst, row, col_node):
+        wl = col_node // 32 - off
+        ok = live & (wl >= 0) & (wl < ws)
+        r = jnp.where(ok, row, n)  # out-of-bounds scatter index -> dropped
+        c = jnp.where(ok, wl, 0)
+        bit = jnp.where(ok, jnp.uint32(1) << (col_node % 32).astype(jnp.uint32),
+                        jnp.uint32(0))
+        # dedup guarantees each (row, col_node) appears once, so distinct
+        # updates to one word carry distinct bits and add == bitwise-or
+        return dst.at[r, c].add(bit)
+
+    delta = owned_scatter(jnp.zeros_like(adj_s), lo, hi)
+    delta = owned_scatter(delta, hi, lo)
+
+    glo = jnp.clip(lo, 0, n - 1)
+    ghi = jnp.clip(hi, 0, n - 1)
+    au, av = adj_s[glo], adj_s[ghi]
+    du, dv = delta[glo], delta[ghi]
+
+    def masked_sum(words):
+        pc = jax.lax.population_count(words).sum(axis=-1)
+        return jnp.sum(jnp.where(live, pc, 0), dtype=count_dtype())
+
+    table_bytes = n * ws * 4
+    edge_bytes = lo.shape[0] * 8
+    kernel_ok = (use_kernel and table_bytes <= _MASK_VMEM_BUDGET
+                 and edge_bytes <= _EDGE_SMEM_BUDGET)
+    if kernel_ok:
+        from repro.kernels.bitset_count.ops import bitset_edge_count, bitset_pair_count
+
+        # dead edges become phantoms (id = n) so the kernel's validity mask
+        # doubles as the live mask
+        ek = jnp.where(live[:, None], jnp.stack([lo, hi], axis=1), n)
+        pre = bitset_edge_count(adj_s, ek, interpret=interpret).astype(count_dtype())
+        if 2 * table_bytes <= _MASK_VMEM_BUDGET:  # pair kernel holds two tables
+            mixed = (bitset_pair_count(adj_s, delta, ek, interpret=interpret)
+                     + bitset_pair_count(delta, adj_s, ek, interpret=interpret)
+                     ).astype(count_dtype())
+            dd = bitset_edge_count(delta, ek, interpret=interpret).astype(count_dtype())
+        else:
+            mixed = masked_sum(au & dv) + masked_sum(du & av)
+            dd = masked_sum(du & dv)
+    else:
+        pre = masked_sum(au & av)
+        mixed = masked_sum(au & dv) + masked_sum(du & av)
+        dd = masked_sum(du & dv)
+    return adj_s | delta, jnp.stack([pre, mixed, dd])
+
+
+def _combine(count, terms):
+    # terms = full-width (pre, mixed, dd); integer divisions are exact (see
+    # the multiplicities in the module docstring)
+    return count + terms[0] + terms[1] // 2 + terms[2] // 3
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def ingest_block(state: dict, edges: jax.Array, *, use_kernel: bool = False,
+                 interpret: bool = True) -> dict:
+    """Fold one (B, 2) int32 edge block (phantom rows: id >= n_nodes) with the
+    two-phase blocked ingest. Duplicate edges are ignored (the paper's
+    simple-graph precondition); self-loops contribute nothing."""
+    _INGEST_TRACES[0] += 1
+    adj = state["adj"]
+    n = adj.shape[0]
+    keep, lo, hi = _canonical_live(edges, n)
+    live = keep & (_stage_seen(adj, lo, hi, 0) == 0)
+    adj, terms = _stage_update(adj, lo, hi, live, 0,
+                               use_kernel=use_kernel, interpret=interpret)
+    return {"adj": adj, "count": _combine(state["count"], terms)}
+
+
+@jax.jit
+def ingest_block_sharded(state: dict, edges: jax.Array) -> dict:
+    """Ring-sharded ingest, single-host emulation: vmap over the stage axis
+    stands in for the device ring, sum over stages for the psum. Exercises
+    the exact word-shard decomposition the mesh path runs under shard_map
+    (``make_mesh_ingest``); the Pallas kernel stays off here because the
+    emulation vmaps the stage axis."""
+    _INGEST_TRACES[0] += 1
+    adj = state["adj"]  # (S, n, Ws)
+    s, n, ws = adj.shape
+    keep, lo, hi = _canonical_live(edges, n)
+    offs = jnp.arange(s, dtype=jnp.int32) * ws
+    seen = jax.vmap(lambda a, o: _stage_seen(a, lo, hi, o))(adj, offs).sum(0)
+    live = keep & (seen == 0)
+    adj, terms = jax.vmap(lambda a, o: _stage_update(a, lo, hi, live, o))(adj, offs)
+    return {"adj": adj, "count": _combine(state["count"], terms.sum(0))}
+
+
+@lru_cache(maxsize=32)
+def make_mesh_ingest(mesh, axis_name: str | None = None, *,
+                     use_kernel: bool = False, interpret: bool = True):
+    """Jitted ring-sharded ingest step over a real device mesh: the state's
+    stage axis is laid out along ``axis_name`` (one word shard per device)
+    via ``dynamic_pipeline.ShardedStateStream``; ``seen`` and the
+    (pre, mixed, dd) partials are psum-reduced per block. Memoized so every
+    block of every stream on one mesh reuses one compiled executable."""
+    from repro.core.dynamic_pipeline import ShardedStateStream
+
+    runtime = ShardedStateStream(mesh, axis_name or mesh.axis_names[0])
+    ax = runtime.axis_name
+
+    def step(adj_s, carry, edges):
+        _INGEST_TRACES[0] += 1
+        n, ws = adj_s.shape
+        off = jax.lax.axis_index(ax) * ws
+        keep, lo, hi = _canonical_live(edges, n)
+        seen = jax.lax.psum(_stage_seen(adj_s, lo, hi, off), ax)
+        live = keep & (seen == 0)
+        adj_s, terms = _stage_update(adj_s, lo, hi, live, off,
+                                     use_kernel=use_kernel, interpret=interpret)
+        return adj_s, _combine(carry, jax.lax.psum(terms, ax))
+
+    fn = runtime.jit_step(step)
+
+    def ingest(state: dict, edges: jax.Array) -> dict:
+        adj, count = fn(state["adj"], state["count"], edges)
+        return {"adj": adj, "count": count}
+
+    return ingest
+
+
+# --------------------------------------------------------------------------
+# Per-edge scan — the seed implementation, retained as the oracle
+# --------------------------------------------------------------------------
+@jax.jit
+def ingest_block_per_edge(state: dict, edges: jax.Array) -> dict:
+    """The seed per-edge ``lax.scan`` fold: O(B) sequential steps per block.
+    Retained as the differential-testing ORACLE for ``ingest_block`` /
+    ``ingest_block_sharded`` and as the ``stream_bench`` baseline — it is
+    trivially correct (each edge sees exactly the adjacency before it) but
+    neither parallel nor pipelined."""
     _INGEST_TRACES[0] += 1
     n = state["adj"].shape[0]
 
@@ -73,33 +283,79 @@ def ingest_block(state: dict, edges: jax.Array) -> dict:
 def padded_blocks(blocks, n_nodes: int, block_size: int | None = None):
     """Normalize an iterable of (B, 2) edge blocks to ONE fixed block shape.
 
-    ``ingest_block`` retraces per distinct block shape, so a stream whose
-    trailing block is partial (or whose producer emits ragged blocks) pays an
-    extra compile per shape. This pads every block to ``block_size`` rows
-    with phantom edges (id = n_nodes, which ``ingest_block`` already treats
-    as invalid) and splits oversized blocks, so exactly one trace is ever
-    taken. ``block_size=None`` adopts the first block's size.
+    The ingest functions retrace per distinct block shape, so a producer that
+    emits ragged blocks pays an extra compile per shape. This coalesces and
+    splits the incoming blocks to exactly ``block_size`` rows, padding the
+    trailing remainder with phantom edges (id = n_nodes, which every ingest
+    treats as invalid). A stream that ends before ever filling one block is
+    padded to the next power of two instead (still a single shape for the
+    stream — a 100-edge stream under a planner-sized 1M block must not scan
+    1M phantom rows). ``block_size=None`` adopts the first block's size.
+    The count is invariant to the re-blocking: triangle totals do not depend
+    on edge order, and coalescing preserves order anyway.
     """
+    buf: list[np.ndarray] = []
+    buffered = 0
+    emitted_full = False
     for block in blocks:
         b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
         if len(b) == 0:
             continue
         if block_size is None:
             block_size = len(b)
-        for i in range(0, len(b), block_size):
-            chunk = b[i:i + block_size]
-            if len(chunk) < block_size:
-                pad = np.full((block_size - len(chunk), 2), n_nodes, np.int32)
-                chunk = np.concatenate([chunk, pad])
+        buf.append(b)
+        buffered += len(b)
+        while buffered >= block_size:
+            flat = np.concatenate(buf) if len(buf) > 1 else buf[0]
+            chunk, rest = flat[:block_size], flat[block_size:]
+            buf, buffered = ([rest], len(rest)) if len(rest) else ([], 0)
+            emitted_full = True
             yield jnp.asarray(chunk)
+    if buffered:
+        flat = np.concatenate(buf) if len(buf) > 1 else buf[0]
+        if emitted_full:
+            target = block_size
+        else:  # never filled a block: one power-of-two shape, not block_size
+            target = 8
+            while target < min(buffered, block_size):
+                target *= 2
+            target = min(target, block_size)
+        pad = np.full((target - len(flat), 2), n_nodes, np.int32)
+        yield jnp.asarray(np.concatenate([flat, pad]))
 
 
-def count_stream(n_nodes: int, blocks, *, block_size: int | None = None) -> int:
+def count_stream(n_nodes: int, blocks, *, block_size: int | None = None,
+                 n_stages: int = 1, mesh=None, use_kernel: bool = False,
+                 interpret: bool = True) -> int:
     """Consume an iterable of (B, 2) numpy edge blocks; returns the exact
     triangle count without ever materializing the full edge list. Blocks are
-    padded to one fixed shape (see ``padded_blocks``) so the whole stream
-    compiles once."""
+    coalesced/padded to one fixed shape (see ``padded_blocks``) so the whole
+    stream compiles once.
+
+    ``n_stages > 1`` column-shards the adjacency state over the ring
+    (n²/8/S bytes per stage): on ``mesh`` (when its size matches) each shard
+    lives on its own device under shard_map, otherwise the sharding is
+    emulated on host. ``use_kernel`` routes the phase-1 closure sweep through
+    ``kernels/bitset_count`` where the state fits its VMEM/SMEM budgets."""
+    if n_stages > 1:
+        state = init_sharded_state(n_nodes, n_stages)
+        if mesh is not None and mesh.devices.size == n_stages:
+            step = make_mesh_ingest(mesh, use_kernel=use_kernel, interpret=interpret)
+        else:
+            step = ingest_block_sharded
+    else:
+        state = init_state(n_nodes)
+        step = partial(ingest_block, use_kernel=use_kernel, interpret=interpret)
+    for block in padded_blocks(blocks, n_nodes, block_size):
+        state = step(state, block)
+    return int(state["count"])
+
+
+def count_stream_per_edge(n_nodes: int, blocks, *,
+                          block_size: int | None = None) -> int:
+    """The seed streaming fold (per-edge scan) — the oracle twin of
+    ``count_stream`` for differential tests and ``stream_bench``."""
     state = init_state(n_nodes)
     for block in padded_blocks(blocks, n_nodes, block_size):
-        state = ingest_block(state, block)
+        state = ingest_block_per_edge(state, block)
     return int(state["count"])

@@ -47,6 +47,26 @@ def _kernel(edges_ref, masks_ref, out_ref, *, n_pad: int, edge_tile: int):
     out_ref[0, 0] += acc
 
 
+def _pair_kernel(edges_ref, a_ref, b_ref, out_ref, *, n_pad: int, edge_tile: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def closure(e, acc):
+        u = edges_ref[t * edge_tile + e, 0]
+        v = edges_ref[t * edge_tile + e, 1]
+        uc = jnp.minimum(u, n_pad - 1)
+        vc = jnp.minimum(v, n_pad - 1)
+        both = jnp.bitwise_and(a_ref[pl.ds(uc, 1), :], b_ref[pl.ds(vc, 1), :])
+        pc = jax.lax.population_count(both).sum().astype(jnp.int32)
+        return acc + jnp.where(u < n_pad, pc, 0)
+
+    acc = jax.lax.fori_loop(0, edge_tile, closure, jnp.int32(0))
+    out_ref[0, 0] += acc
+
+
 def _per_edge_kernel(edges_ref, mu_ref, mv_ref, out_ref, *, n_pad: int):
     i = pl.program_id(0)
 
@@ -85,6 +105,35 @@ def bitset_edge_count_per_edge_kernel(masks: jax.Array, edges: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
         interpret=interpret,
     )(edges, masks, masks)[0, 0]
+
+
+def bitset_pair_count_kernel(masks_a: jax.Array, masks_b: jax.Array,
+                             edges: jax.Array, *, edge_tile: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """Two-table variant of the blocked kernel: Σ_e popcount(a[u_e] & b[v_e])
+    with u gathered from ``masks_a`` and v from ``masks_b`` — the mixed
+    (pre-block × in-block) closure term of the streaming two-phase ingest.
+    Both tables are VMEM-resident (constant index maps), so callers must
+    budget for two tables, not one."""
+    n_pad, w = masks_a.shape
+    assert masks_b.shape == (n_pad, w), (masks_a.shape, masks_b.shape)
+    b = edges.shape[0]
+    assert b % edge_tile == 0, (b, edge_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b // edge_tile,),
+        in_specs=[
+            pl.BlockSpec((n_pad, w), lambda t, e: (0, 0)),
+            pl.BlockSpec((n_pad, w), lambda t, e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda t, e: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, n_pad=n_pad, edge_tile=edge_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(edges, masks_a, masks_b)[0, 0]
 
 
 def bitset_edge_count_kernel(masks: jax.Array, edges: jax.Array, *,

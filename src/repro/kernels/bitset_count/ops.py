@@ -6,7 +6,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bitset_count.bitset_count import bitset_edge_count_kernel
+from repro.kernels.bitset_count.bitset_count import (
+    bitset_edge_count_kernel,
+    bitset_pair_count_kernel,
+)
 
 
 @partial(jax.jit, static_argnames=("edge_tile", "interpret"))
@@ -29,6 +32,25 @@ def bitset_edge_count(masks: jax.Array, edges: jax.Array, *,
         edges = jnp.pad(edges, ((0, pad), (0, 0)), constant_values=n_pad)
     return bitset_edge_count_kernel(masks, edges, edge_tile=edge_tile,
                                     interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("edge_tile", "interpret"))
+def bitset_pair_count(masks_a: jax.Array, masks_b: jax.Array, edges: jax.Array,
+                      *, edge_tile: int = 128,
+                      interpret: bool | None = None) -> jax.Array:
+    """Σ_e popcount(masks_a[u_e] & masks_b[v_e]) — the two-table closure used
+    by the streaming ingest's intra-block correction (u rows from the
+    pre-block adjacency, v rows from the block delta, or vice versa). Same
+    phantom/padding contract as :func:`bitset_edge_count`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pad = masks_a.shape[0]
+    edges = edges.astype(jnp.int32)
+    pad = (-edges.shape[0]) % edge_tile
+    if pad:
+        edges = jnp.pad(edges, ((0, pad), (0, 0)), constant_values=n_pad)
+    return bitset_pair_count_kernel(masks_a, masks_b, edges,
+                                    edge_tile=edge_tile, interpret=interpret)
 
 
 def bitset_grid_steps(n_edges: int, *, edge_tile: int = 128) -> int:

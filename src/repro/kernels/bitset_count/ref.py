@@ -6,10 +6,16 @@ import jax.numpy as jnp
 def bitset_edge_count_ref(masks: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
     """masks: (n_pad, W) uint32 membership bitsets; edges: (B, 2) int32 ranks
     (phantom rows use id >= n_pad). Returns Σ_e popcount(masks[u] & masks[v])."""
-    n_pad = masks.shape[0]
+    return bitset_pair_count_ref(masks, masks, edges)
+
+
+def bitset_pair_count_ref(masks_a: jnp.ndarray, masks_b: jnp.ndarray,
+                          edges: jnp.ndarray) -> jnp.ndarray:
+    """Two-table oracle: Σ_e popcount(masks_a[u] & masks_b[v])."""
+    n_pad = masks_a.shape[0]
     u = jnp.minimum(edges[:, 0], n_pad - 1)
     v = jnp.minimum(edges[:, 1], n_pad - 1)
     valid = edges[:, 0] < n_pad
-    both = jnp.bitwise_and(masks[u], masks[v])
+    both = jnp.bitwise_and(masks_a[u], masks_b[v])
     pc = jax.lax.population_count(both).sum(axis=-1)
     return jnp.sum(jnp.where(valid, pc, 0), dtype=jnp.int32)

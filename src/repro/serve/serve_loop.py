@@ -81,8 +81,11 @@ class TriangleServer:
     One ``TriangleCounter`` (one compile cache) lives for the server's
     lifetime, so steady-state traffic never retraces. Small graphs whose plan
     is the dense path are grouped by padded-shape bucket and counted with ONE
-    vmapped executable call per group (``count_batch``); everything else runs
-    its planner-chosen path individually. Results come back as per-request
+    vmapped executable call per group (``count_batch``, executed under the
+    group's planner plan so the backend kernel decision survives batching);
+    everything else runs its planner-chosen path individually, and streaming
+    requests (``serve_stream``) fold through the same cache. Results come
+    back as per-request
     ``CountResult``s in request order — counts stay device arrays, so an
     aggregating caller syncs once, not per request.
     """
@@ -99,17 +102,22 @@ class TriangleServer:
 
         cfg = self.cfg
         results: list = [None] * len(graphs)
-        batchable: dict[int, list[int]] = {}  # node bucket -> request indices
+        # node bucket -> (the group's planner plan, request indices). The
+        # plan rides along so count_batch executes the planner's backend
+        # decision (use_kernel/interpret) instead of Plan defaults — on TPU
+        # the batched path must run the compiled kernels too.
+        batchable: dict[int, tuple] = {}
         for i, g in enumerate(graphs):
             p = self.counter.plan_for(g)
             if p.method == "dense" and g.n_nodes <= cfg.batch_node_limit:
-                batchable.setdefault(bucket(g.n_nodes), []).append(i)
+                batchable.setdefault(bucket(g.n_nodes), (p, []))[1].append(i)
             else:
                 results[i] = self.counter.count(g, plan=p)
-        for idx in batchable.values():
+        for group_plan, idx in batchable.values():
             for j in range(0, len(idx), cfg.max_batch):
                 chunk = idx[j:j + cfg.max_batch]
-                rb = self.counter.count_batch([graphs[i] for i in chunk])
+                rb = self.counter.count_batch([graphs[i] for i in chunk],
+                                              plan=group_plan)
                 for pos, i in enumerate(chunk):
                     # amortized share of the batch call, so summing wall_s
                     # over a response doesn't multiply-count the batch (the
@@ -121,3 +129,13 @@ class TriangleServer:
                                "batch_wall_s": rb.wall_s},
                     )
         return results
+
+    def serve_stream(self, n_nodes: int, blocks, *,
+                     block_size: int | None = None):
+        """Serve one streaming request (an iterable of (B, 2) edge blocks —
+        the paper's not-memory-resident regime) through the SAME counter as
+        the resident requests: the planner sizes ``n_stages``/``block_size``
+        from the server's resources, and the jitted ingest step lands in the
+        server's compile cache, so repeated streams with one block shape
+        never retrace."""
+        return self.counter.count_stream(n_nodes, blocks, block_size=block_size)

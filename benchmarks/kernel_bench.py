@@ -216,10 +216,21 @@ def counter_bench(*, quick: bool = False, reps: int | None = None) -> list[dict]
 def write_bench_json(records: list[dict], out_path: str = DEFAULT_OUT) -> str:
     out_path = os.path.abspath(out_path)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    # preserve rows owned by other benches (e.g. serve_bench's
+    # serve_multiplex records) — each bench refreshes only its own ops
+    ours = {r["op"] for r in records}
+    foreign: list[dict] = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                foreign = [r for r in json.load(f).get("records", [])
+                           if r.get("op") not in ours]
+        except (json.JSONDecodeError, OSError):
+            foreign = []
     payload = {
         "schema": ["op", "shape", "method", "median_ms", "grid_steps"],
         "backend": jax.default_backend(),
-        "records": records,
+        "records": records + foreign,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)

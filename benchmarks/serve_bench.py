@@ -1,0 +1,155 @@
+"""Multi-stream serving benchmark: S interleaved sessions vs S sequential
+``count_stream`` calls.
+
+This is the paper's "graph dynamically generated" regime turned into a
+serving workload: S edge streams arrive concurrently at one
+``TriangleServer``; the ``StreamMultiplexer`` interleaves block ingest
+across all of them in admission order over ONE shared compile cache. The
+benchmark verifies the two serving claims and measures the cost of
+concurrency:
+
+- correctness: interleaved counts are bit-identical to S sequential
+  ``count_stream`` runs (asserted every rep);
+- compile economics: S sessions with one block shape cost exactly ONE
+  ingest trace — shared across sessions AND with the sequential path
+  (asserted, and recorded as ``ingest_traces`` in the output rows);
+- throughput: total wall-clock for all S streams, interleaved vs
+  sequential. Same total work, same cache — multiplexing should cost ~0;
+  the win is concurrency (S live streams per server instead of 1), not
+  speed.
+
+Rows (op = ``serve_multiplex``) are MERGED into BENCH_kernels.json — all
+other ops' records are preserved. ``--quick`` is the CI-cheap variant
+(4 streams, small graphs, interpret-safe CPU defaults).
+
+Usage: PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
+           [--streams S] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.api import TriangleCounter
+from repro.core.streaming import ingest_trace_count
+from repro.core.triangle_ref import count_triangles_brute
+from repro.graphs import generators as gen
+from repro.serve.serve_loop import TriangleServer
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+
+
+def build_streams(n_streams: int, n_nodes: int, m_target: int, block: int):
+    """S distinct shuffled edge streams (ragged tails included) + their
+    brute-force triangle counts."""
+    density = m_target / (n_nodes * (n_nodes - 1) / 2)
+    streams = []
+    for i in range(n_streams):
+        g = gen.gnp(n_nodes, density, seed=1000 + i)
+        rng = np.random.default_rng(i)
+        e = g.edges[rng.permutation(g.n_edges)]
+        blocks = [e[j:j + block] for j in range(0, len(e), block)]
+        streams.append((g, blocks, count_triangles_brute(g)))
+    return streams
+
+
+def bench_serve(*, quick: bool = False, n_streams: int | None = None,
+                reps: int | None = None) -> list[dict]:
+    S = n_streams or (4 if quick else 8)
+    n, m, block = (256, 4096, 512) if quick else (1024, 65536, 8192)
+    reps = reps or (3 if quick else 5)
+    streams = build_streams(S, n, m, block)
+    m_total = sum(len(g.edges) for g, _, _ in streams)
+    shape = f"S{S}/n{n}/m{m_total}/b{block}"
+    requests = [(n, blocks) for _, blocks, _ in streams]
+    wants = [want for _, _, want in streams]
+
+    server = TriangleServer()
+
+    # -- trace economics, measured on the FRESH cache -----------------------
+    traces0 = ingest_trace_count()
+    inter = server.serve_streams(requests, block_size=block)
+    traces_interleaved = ingest_trace_count() - traces0
+    assert [r.item() for r in inter] == wants, "interleaved counts wrong"
+    assert traces_interleaved == 1, \
+        f"expected ONE shared ingest trace for {S} sessions, got {traces_interleaved}"
+
+    traces0 = ingest_trace_count()
+    seq = [server.serve_stream(n, blocks, block_size=block)
+           for _, blocks, _ in streams]
+    traces_sequential = ingest_trace_count() - traces0
+    assert [r.item() for r in seq] == wants, "sequential counts wrong"
+    assert traces_sequential == 0, "sequential reruns must reuse the session trace"
+    for a, b in zip(inter, seq):
+        assert np.asarray(a.count) == np.asarray(b.count)  # bit-identical
+
+    # -- steady-state throughput (cache warm for both modes) ----------------
+    n_blocks_total = sum(len(b) for _, b, _ in streams)
+
+    def run_interleaved():
+        return server.serve_streams(requests, block_size=block)
+
+    def run_sequential():
+        return [server.serve_stream(n, blocks, block_size=block)
+                for _, blocks, _ in streams]
+
+    records = []
+    for method, fn, traces in (
+            ("sequential_streams", run_sequential, traces_sequential),
+            ("interleaved_sessions", run_interleaved, traces_interleaved)):
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready([r.count for r in out])
+            samples.append((time.perf_counter() - t0) * 1e3)
+            assert [r.item() for r in out] == wants
+        ms = statistics.median(samples)
+        records.append({
+            "op": "serve_multiplex", "shape": shape, "method": method,
+            "median_ms": round(ms, 3), "grid_steps": n_blocks_total,
+            "ingest_traces": traces,
+            "edges_per_s": round(m_total / (ms / 1e3)),
+        })
+        print(f"  {method:22s} {ms:9.1f} ms for {S} streams "
+              f"({m_total} edges, {n_blocks_total} block dispatches, "
+              f"{records[-1]['edges_per_s']:,} edges/s, "
+              f"{traces} fresh ingest trace(s))")
+    return records
+
+
+def merge_bench_json(records: list[dict], out_path: str = DEFAULT_OUT) -> str:
+    """Append/refresh the serve rows in BENCH_kernels.json, preserving every
+    other op's records — kernel_bench's writer owns the one merge
+    implementation (incl. the corrupt-file recovery), so the two benches
+    cannot drift."""
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from kernel_bench import write_bench_json
+
+    return write_bench_json(records, out_path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 4 small streams, 3 reps")
+    ap.add_argument("--streams", type=int, default=None,
+                    help="number of concurrent streams (default 4 quick / 8 full)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"BENCH json to merge into (default {DEFAULT_OUT})")
+    args = ap.parse_args()
+    print(f"serve_bench: backend={jax.default_backend()} quick={args.quick}")
+    records = bench_serve(quick=args.quick, n_streams=args.streams)
+    path = merge_bench_json(records, args.out)
+    print(f"merged {len(records)} serve_multiplex records into {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,4 +41,17 @@ print(f"stream (bitset fold):          {rs.item()}  "
 small = [gen.gnp(60, 0.3, seed=s) for s in range(4)]
 rb = counter.count_batch(small)
 print(f"batch of {len(small)}:   {[int(x) for x in rb.count]}")
+
+# Served: batched resident requests + CONCURRENT stream sessions, one server.
+from repro.serve.serve_loop import TriangleServer
+
+server = TriangleServer()
+served = server.serve(small)
+print(f"served batch:  {[r.item() for r in served]}")
+streams = [(graph.n_nodes, [graph.edges[i:i + 1024]
+                            for i in range(0, graph.n_edges, 1024)])
+           for _ in range(4)]
+multi = server.serve_streams(streams, block_size=1024)  # interleaved ingest
+print(f"4 concurrent streams:          {[r.item() for r in multi]}  "
+      f"(all sessions share one ingest trace)")
 print(f"compile cache: {counter.cache_info}")

@@ -29,21 +29,32 @@ Plan method → paper section map:
   ingest replaces the per-edge scan, and ``n_stages > 1`` column-shards the
   adjacency state over the ring (n²/8/S bytes per device).
 
+Streams are served concurrently through sessions:
+``TriangleCounter.open_stream`` returns a ``StreamSession`` handle
+(open → feed blocks → finalize; ``count_stream`` is the one-session
+wrapper), ``admit_session`` budgets how many sessions' pinned bitset states
+(n²/8/S bytes each) fit ``Resources.memory_bytes`` — admit-dense vs
+admit-sharded vs queue — and ``serve.StreamMultiplexer`` interleaves block
+ingest across admitted sessions over one shared compile cache.
+
 ``count_triangles(g, method=...)`` survives as a deprecated shim over the
 default counter.
 """
 from repro.api.planner import (
     METHODS,
     MR_RF_FACTOR,
+    Admission,
     GraphStats,
     Plan,
     Resources,
+    admit_session,
     plan,
     plan_for_graph,
     stream_sizing,
 )
 from repro.api.counter import (
     CountResult,
+    StreamSession,
     TriangleCounter,
     bucket,
     count_triangles,
@@ -53,13 +64,16 @@ from repro.api.counter import (
 __all__ = [
     "METHODS",
     "MR_RF_FACTOR",
+    "Admission",
     "GraphStats",
     "Plan",
     "Resources",
+    "admit_session",
     "plan",
     "plan_for_graph",
     "stream_sizing",
     "CountResult",
+    "StreamSession",
     "TriangleCounter",
     "bucket",
     "count_triangles",

@@ -106,8 +106,14 @@ class TriangleCounter:
 
     # -- entry points ------------------------------------------------------
     def count(self, g, *, plan: Plan | None = None) -> CountResult:
-        """Count triangles in a memory-resident graph under ``plan`` (or the
-        planner's choice)."""
+        """Count triangles in a memory-resident graph.
+
+        Plan resolution order: the ``plan`` argument, else the counter's
+        fixed plan, else the planner on ``GraphStats.from_graph(g)`` — every
+        execution knob comes from the resolved plan, never from defaults.
+        The executable is cached under ``(plan.cache_key(), shape bucket)``:
+        operands pad to power-of-two buckets, so same-bucket graphs reuse one
+        trace across calls (``stats["cache"]`` records key/hit/traces)."""
         p = plan or self.plan_for(g)
         t0 = time.perf_counter()
         executor = getattr(self, f"_run_{p.method}", None)
@@ -117,24 +123,26 @@ class TriangleCounter:
         return CountResult(count=count, plan=p,
                            wall_s=time.perf_counter() - t0, stats=stats)
 
-    def count_stream(self, n_nodes: int, blocks: Iterable, *,
-                     plan: Plan | None = None,
-                     block_size: int | None = None) -> CountResult:
-        """Fold an iterable of (B, 2) edge blocks — ``core.streaming`` behind
-        the same result contract.
+    def open_stream(self, n_nodes: int, *, plan: Plan | None = None,
+                    block_size: int | None = None) -> "StreamSession":
+        """Open a :class:`StreamSession` — the handle behind every streaming
+        entry point (``count_stream`` is open → feed → finalize in one call;
+        the serve loop's ``StreamMultiplexer`` interleaves many).
 
-        The plan is resolved FIRST (argument, else the counter's fixed plan,
-        else the planner on not-memory-resident stats), so the planner's
-        ``block_size`` and ``n_stages`` actually apply; an explicit
+        Plan resolution order (identical to ``count_stream``): the ``plan``
+        argument, else the counter's fixed plan, else the planner on
+        not-memory-resident stats — resolved BEFORE the block size, so the
+        planner's ``block_size``/``n_stages`` actually apply; an explicit
         ``block_size`` argument still overrides the plan's. Plans whose
         method is not ``"stream"`` are rejected — silently streaming under a
         dense/ring plan would ignore every knob the caller thought they set.
-        ``n_stages > 1`` runs the ring-sharded ingest (column-sharded
-        adjacency, n²/8/S bytes per stage) — on ``self.mesh`` when its size
-        matches, else host-emulated. The ingest step lives in this counter's
-        compile cache, so e.g. serve-loop streams share it across requests."""
-        from repro.core import streaming
 
+        The session's jitted ingest step registers in THIS counter's compile
+        cache under ``(plan.cache_key(), ("stream", n_nodes, block_size,
+        on_mesh))``, and the underlying ingest functions are module-level
+        jits keyed by block shape — so S concurrent sessions feeding one
+        block shape cost exactly one trace, shared across all of them.
+        """
         p = plan or self.fixed_plan
         if p is None:
             stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
@@ -147,28 +155,25 @@ class TriangleCounter:
                 f"plans, or drop the plan to let the planner size the stream")
         if block_size is None:
             block_size = p.block_size
-        t0 = time.perf_counter()
-        traces0 = streaming.ingest_trace_count()
-        on_mesh = self._mesh_matches(p.n_stages)
-        key = (p.cache_key(), ("stream", n_nodes, block_size, on_mesh))
-        entry = self._entry(key, lambda e: self._make_stream(e, p, on_mesh))
-        if p.n_stages > 1:
-            state = streaming.init_sharded_state(n_nodes, p.n_stages)
-        else:
-            state = streaming.init_state(n_nodes)
-        n_blocks = 0
-        for b in streaming.padded_blocks(blocks, n_nodes, block_size=block_size):
-            state = entry.fn(state, b)
-            n_blocks += 1
-        return CountResult(
-            count=state["count"], plan=p, wall_s=time.perf_counter() - t0,
-            stats={"n_blocks": n_blocks, "block_size": block_size,
-                   "n_stages": p.n_stages, "sharded": p.n_stages > 1,
-                   "on_mesh": on_mesh,
-                   "state_bytes": int(state["adj"].nbytes),
-                   "cache": self._cache_stats(key, entry),
-                   "ingest_traces": streaming.ingest_trace_count() - traces0},
-        )
+        return StreamSession(self, n_nodes, p, block_size,
+                             self._mesh_matches(p.n_stages))
+
+    def count_stream(self, n_nodes: int, blocks: Iterable, *,
+                     plan: Plan | None = None,
+                     block_size: int | None = None) -> CountResult:
+        """Fold an iterable of (B, 2) edge blocks — ``core.streaming`` behind
+        the same result contract, as a one-session wrapper over
+        :meth:`open_stream` (see it for the plan-resolution order, the
+        stream-plan requirement, and the cache-keying contract).
+
+        ``n_stages > 1`` runs the ring-sharded ingest (column-sharded
+        adjacency, n²/8/S bytes per stage) — on ``self.mesh`` when its size
+        matches, else host-emulated. The ingest step lives in this counter's
+        compile cache, so e.g. serve-loop streams share it across requests."""
+        session = self.open_stream(n_nodes, plan=plan, block_size=block_size)
+        for b in blocks:
+            session.feed(b)
+        return session.finalize()
 
     def _make_stream(self, entry: _Entry, p: Plan, on_mesh: bool):
         from functools import partial as _partial
@@ -201,7 +206,15 @@ class TriangleCounter:
     def count_batch(self, graphs: list, *, plan: Plan | None = None) -> CountResult:
         """Vmapped dense path over many small graphs: one compiled executable
         per (batch bucket, node bucket) counts the whole batch in one call.
-        ``count`` is the (len(graphs),) per-graph vector."""
+        ``count`` is the (len(graphs),) per-graph vector.
+
+        Plan resolution: the ``plan`` argument, else :meth:`batch_plan`
+        (derived from ``self.resources`` so the backend kernel switch
+        survives batching). NOTE: the counter's fixed plan is deliberately
+        NOT consulted — a fixed single-graph plan rarely describes a batch;
+        pass ``plan=`` explicitly to force one. Non-``dense`` plans are
+        rejected. Cached under ``(("batch_dense",) + plan.cache_key(),
+        (batch bucket, node bucket))``, both buckets power-of-two padded."""
         from repro.graphs.formats import forward_adjacency_dense
 
         if not graphs:
@@ -398,6 +411,103 @@ class TriangleCounter:
             p, block_size=min(p.block_size, bucket(max(g.n_edges, 1), minimum=256)))
         res = self.count_stream(g.n_nodes, [g.edges], plan=p_run)
         return res.count, res.stats
+
+
+class StreamSession:
+    """One in-flight streaming count: open → ``feed`` blocks → ``finalize``.
+
+    The handle owns this stream's state — the adjacency-so-far bitset
+    (n²/8 bytes dense, n²/8/S per stage when the plan is ring-sharded) plus a
+    :class:`~repro.core.streaming.BlockBuffer` that re-blocks ragged feeds to
+    one fixed shape — and borrows everything compiled from the counter that
+    opened it: many sessions over one counter share one compile cache, so S
+    concurrent streams feeding one block shape cost exactly one trace.
+    Sessions are independent ("concurrent" means interleavable from one
+    driver thread, e.g. the serve loop's ``StreamMultiplexer``; the handle
+    itself is not thread-safe).
+
+    ``feed`` ingests every full block the new edges completed and buffers the
+    remainder host-side (at most ``block_size - 1`` edges). ``finalize``
+    flushes the padded tail, returns the :class:`CountResult`, and is
+    idempotent — later calls return the same result; later ``feed`` calls
+    raise. ``state_bytes`` is the per-stage device footprint the session pins
+    while open — the number the serve loop's admission accounting charges.
+    """
+
+    def __init__(self, counter: TriangleCounter, n_nodes: int, plan: Plan,
+                 block_size: int, on_mesh: bool):
+        from repro.core import streaming
+
+        self.counter = counter
+        self.n_nodes = n_nodes
+        self.plan = plan
+        self.block_size = block_size
+        self._buffer = streaming.BlockBuffer(n_nodes, block_size)
+        self._key = (plan.cache_key(), ("stream", n_nodes, block_size, on_mesh))
+        self._entry = counter._entry(
+            self._key, lambda e: counter._make_stream(e, plan, on_mesh))
+        self._cache_hit = self._entry.hits > 0
+        self._on_mesh = on_mesh
+        if plan.n_stages > 1:
+            self.state = streaming.init_sharded_state(n_nodes, plan.n_stages)
+        else:
+            self.state = streaming.init_state(n_nodes)
+        # per-device footprint: one column shard when a real mesh hosts the
+        # stage axis; the WHOLE array when the sharding is host-emulated —
+        # emulation keeps all S shards on one device, so admission budgets
+        # must charge all of them
+        nbytes = int(self.state["adj"].nbytes)
+        self.state_bytes = nbytes // plan.n_stages if on_mesh else nbytes
+        self.n_blocks = 0
+        self._traces0 = streaming.ingest_trace_count()
+        self._wall = 0.0
+        self.result: CountResult | None = None
+
+    @property
+    def closed(self) -> bool:
+        return self.result is not None
+
+    def feed(self, edges) -> None:
+        """Buffer ``edges`` ((B, 2) array-like, any B including ragged);
+        ingest every full ``block_size`` block they completed."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        t0 = time.perf_counter()
+        for b in self._buffer.push(edges):
+            self.state = self._entry.fn(self.state, b)
+            self.n_blocks += 1
+        self._wall += time.perf_counter() - t0
+
+    def finalize(self) -> CountResult:
+        """Flush the padded tail block and return the stream's
+        :class:`CountResult` (idempotent). ``wall_s`` is the time spent
+        inside ``feed``/``finalize`` — idle time between interleaved feeds is
+        not charged to the session. ``stats["ingest_traces"]`` counts global
+        ingest traces over the session's lifetime, so with interleaved
+        sessions it attributes the one shared trace to whichever session fed
+        the shape first."""
+        if self.result is not None:
+            return self.result
+        from repro.core import streaming
+
+        t0 = time.perf_counter()
+        tail = self._buffer.flush()
+        if tail is not None:
+            self.state = self._entry.fn(self.state, tail)
+            self.n_blocks += 1
+        self._wall += time.perf_counter() - t0
+        p = self.plan
+        self.result = CountResult(
+            count=self.state["count"], plan=p, wall_s=self._wall,
+            stats={"n_blocks": self.n_blocks, "block_size": self.block_size,
+                   "n_stages": p.n_stages, "sharded": p.n_stages > 1,
+                   "on_mesh": self._on_mesh, "session": True,
+                   "state_bytes": int(self.state["adj"].nbytes),
+                   "cache": {"key": self._key, "hit": self._cache_hit,
+                             "traces": self._entry.traces},
+                   "ingest_traces": streaming.ingest_trace_count() - self._traces0},
+        )
+        return self.result
 
 
 _DEFAULT: TriangleCounter | None = None

@@ -231,6 +231,13 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
     reserved for graphs that are not memory-resident. The winner is the
     memory-feasible candidate with the lowest predicted cost; if nothing fits,
     the smallest-footprint candidate is returned with a warning reason.
+
+    This is the LAST step of every counter entry point's plan resolution
+    (explicit ``plan=`` argument, else the counter's fixed plan, else this
+    function), and the returned ``Plan`` is the compile-cache identity: two
+    calls whose plans share ``cache_key()`` and shape bucket share one traced
+    executable. For concurrent stream serving, :func:`admit_session` is the
+    budgeted variant that may answer "queue" instead of always planning.
     """
     res = resources or Resources()
     allowed = set(allow) if allow is not None else set(METHODS)
@@ -304,3 +311,63 @@ def plan_for_graph(g, resources: Resources | None = None, *,
                    allow: set[str] | None = None) -> Plan:
     """Convenience: measure ``g`` then :func:`plan`."""
     return plan(GraphStats.from_graph(g), resources, allow=allow)
+
+
+# --------------------------------------------------------------------------
+# Session admission — the serving story's memory accounting
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """The planner's verdict on opening ONE MORE concurrent stream session.
+
+    ``action`` is ``"admit-dense"`` (plan has ``n_stages == 1``: the session's
+    full n²/8 bitset fits the remaining budget), ``"admit-sharded"``
+    (``n_stages > 1``: only a n²/8/S column shard per stage fits), or
+    ``"queue"`` (``plan`` is None: even the max-ring-width shard exceeds what
+    is left — the request must wait for an active session to close instead of
+    OOMing the server). ``state_bytes`` is the per-stage bytes the session
+    will pin while open — what the multiplexer adds to its in-use accounting
+    on admit.
+    """
+
+    action: str
+    plan: Plan | None
+    state_bytes: int
+    reason: str
+
+    @property
+    def admitted(self) -> bool:
+        return self.action != "queue"
+
+
+def admit_session(n_nodes: int, resources: Resources | None = None, *,
+                  bytes_in_use: int = 0) -> Admission:
+    """Decide whether one more concurrent stream of ``n_nodes`` nodes fits.
+
+    A stream session pins its adjacency-so-far bitset for its whole lifetime
+    — n²/8 bytes dense, n²/8/S per stage when ring-sharded — while edge
+    blocks are transient. So admission charges ``Resources.memory_bytes``
+    only for state: ``bytes_in_use`` (the sum of ``state_bytes`` over
+    currently active sessions) is subtracted and :func:`stream_sizing` picks
+    the smallest ring width whose shard fits the REMAINDER. If even the full
+    ring width does not fit, the verdict is ``"queue"`` — the serve loop
+    buffers the request host-side rather than letting S concurrent states
+    overcommit the device.
+    """
+    res = resources or Resources()
+    remaining = max(res.memory_bytes - bytes_in_use, 0)
+    stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
+                       max_degree=0, max_fwd_degree=0, edges_in_memory=False)
+    sub = dataclasses.replace(res, memory_bytes=remaining)
+    n_stages, _, shard_bytes = stream_sizing(stats, sub)
+    if shard_bytes > remaining:
+        return Admission(
+            action="queue", plan=None, state_bytes=shard_bytes,
+            reason=(f"state shard needs {shard_bytes} B but {remaining} B of "
+                    f"{res.memory_bytes} B remain (even at ring width "
+                    f"{n_stages}) — queue until an active session closes"))
+    kind = "sharded" if n_stages > 1 else "dense"
+    return Admission(
+        action=f"admit-{kind}", plan=plan(stats, sub), state_bytes=shard_bytes,
+        reason=(f"admit-{kind}: {shard_bytes} B/stage state fits the "
+                f"{remaining} B remaining ({bytes_in_use} B already pinned)"))

@@ -135,6 +135,8 @@ class ShardedStateStream:
     column-sharded adjacency bitset (n²/8/S bytes per device).
     """
 
+    _shared: dict[tuple, "ShardedStateStream"] = {}
+
     def __init__(self, mesh: Mesh, axis_name: str = "stage"):
         if axis_name not in mesh.axis_names:
             raise ValueError(f"mesh has no axis {axis_name!r}")
@@ -142,6 +144,17 @@ class ShardedStateStream:
         self.axis_name = axis_name
         self.n_stages = mesh.shape[axis_name]
         self._jit_cache: dict[Any, Any] = {}
+
+    @classmethod
+    def shared(cls, mesh: Mesh, axis_name: str = "stage") -> "ShardedStateStream":
+        """One runtime — hence one shard_map jit cache — per (mesh, axis):
+        every consumer (each stream session's mesh ingest, any future
+        sharded-state fold) lands its step in the same cache, so concurrent
+        serving sessions on one mesh never duplicate a compiled step."""
+        key = (mesh, axis_name)
+        if key not in cls._shared:
+            cls._shared[key] = cls(mesh, axis_name)
+        return cls._shared[key]
 
     def jit_step(self, step_fn: Callable[[Any, Any, Any], tuple[Any, Any]]):
         """Jit ``step_fn(state_local, carry, block) -> (state_local, carry)``

@@ -218,11 +218,13 @@ def make_mesh_ingest(mesh, axis_name: str | None = None, *,
     """Jitted ring-sharded ingest step over a real device mesh: the state's
     stage axis is laid out along ``axis_name`` (one word shard per device)
     via ``dynamic_pipeline.ShardedStateStream``; ``seen`` and the
-    (pre, mixed, dd) partials are psum-reduced per block. Memoized so every
-    block of every stream on one mesh reuses one compiled executable."""
+    (pre, mixed, dd) partials are psum-reduced per block. Memoized (and the
+    runtime shared per mesh) so every block of every stream — including
+    interleaved serving sessions — on one mesh reuses one compiled
+    executable."""
     from repro.core.dynamic_pipeline import ShardedStateStream
 
-    runtime = ShardedStateStream(mesh, axis_name or mesh.axis_names[0])
+    runtime = ShardedStateStream.shared(mesh, axis_name or mesh.axis_names[0])
     ax = runtime.axis_name
 
     def step(adj_s, carry, edges):
@@ -280,48 +282,81 @@ def ingest_block_per_edge(state: dict, edges: jax.Array) -> dict:
     return {"adj": adj, "count": count}
 
 
+class BlockBuffer:
+    """Incremental re-blocking: push ragged edge arrays in, pop fixed-shape
+    blocks out — ``padded_blocks`` as a handle instead of a generator, so a
+    serving session can interleave with other sessions (push a block, yield
+    control, push more) without holding a suspended generator per stream.
+
+    The shape policy is exactly ``padded_blocks``'s: every full block has
+    ``block_size`` rows; the trailing remainder is padded with phantom edges
+    (id = n_nodes, which every ingest treats as invalid); a stream that ends
+    before ever filling one block is padded to the next power of two instead
+    (still a single shape for the stream — a 100-edge stream under a
+    planner-sized 1M block must not scan 1M phantom rows).
+    ``block_size=None`` adopts the first non-empty push's row count.
+    """
+
+    def __init__(self, n_nodes: int, block_size: int | None = None):
+        self.n_nodes = n_nodes
+        self.block_size = block_size
+        self._buf: list[np.ndarray] = []
+        self._buffered = 0
+        self._emitted_full = False
+
+    def push(self, block) -> list[jax.Array]:
+        """Buffer ``block``; return every full ``block_size`` block it
+        completed (possibly none)."""
+        b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
+        if len(b) == 0:
+            return []
+        if self.block_size is None:
+            self.block_size = len(b)
+        self._buf.append(b)
+        self._buffered += len(b)
+        out: list[jax.Array] = []
+        while self._buffered >= self.block_size:
+            flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
+            chunk, rest = flat[: self.block_size], flat[self.block_size:]
+            self._buf, self._buffered = ([rest], len(rest)) if len(rest) else ([], 0)
+            self._emitted_full = True
+            out.append(jnp.asarray(chunk))
+        return out
+
+    def flush(self) -> jax.Array | None:
+        """The padded tail block (None if nothing is buffered). Call once, at
+        end of stream."""
+        if not self._buffered:
+            return None
+        flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
+        self._buf, self._buffered = [], 0
+        if self._emitted_full:
+            target = self.block_size
+        else:  # never filled a block: one power-of-two shape, not block_size
+            target = 8
+            while target < min(len(flat), self.block_size):
+                target *= 2
+            target = min(target, self.block_size)
+        pad = np.full((target - len(flat), 2), self.n_nodes, np.int32)
+        return jnp.asarray(np.concatenate([flat, pad]))
+
+
 def padded_blocks(blocks, n_nodes: int, block_size: int | None = None):
     """Normalize an iterable of (B, 2) edge blocks to ONE fixed block shape.
 
     The ingest functions retrace per distinct block shape, so a producer that
     emits ragged blocks pays an extra compile per shape. This coalesces and
-    splits the incoming blocks to exactly ``block_size`` rows, padding the
-    trailing remainder with phantom edges (id = n_nodes, which every ingest
-    treats as invalid). A stream that ends before ever filling one block is
-    padded to the next power of two instead (still a single shape for the
-    stream — a 100-edge stream under a planner-sized 1M block must not scan
-    1M phantom rows). ``block_size=None`` adopts the first block's size.
-    The count is invariant to the re-blocking: triangle totals do not depend
-    on edge order, and coalescing preserves order anyway.
+    splits the incoming blocks to exactly ``block_size`` rows (the pull-based
+    rendering of :class:`BlockBuffer` — see it for the shape policy). The
+    count is invariant to the re-blocking: triangle totals do not depend on
+    edge order, and coalescing preserves order anyway.
     """
-    buf: list[np.ndarray] = []
-    buffered = 0
-    emitted_full = False
+    buf = BlockBuffer(n_nodes, block_size)
     for block in blocks:
-        b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
-        if len(b) == 0:
-            continue
-        if block_size is None:
-            block_size = len(b)
-        buf.append(b)
-        buffered += len(b)
-        while buffered >= block_size:
-            flat = np.concatenate(buf) if len(buf) > 1 else buf[0]
-            chunk, rest = flat[:block_size], flat[block_size:]
-            buf, buffered = ([rest], len(rest)) if len(rest) else ([], 0)
-            emitted_full = True
-            yield jnp.asarray(chunk)
-    if buffered:
-        flat = np.concatenate(buf) if len(buf) > 1 else buf[0]
-        if emitted_full:
-            target = block_size
-        else:  # never filled a block: one power-of-two shape, not block_size
-            target = 8
-            while target < min(buffered, block_size):
-                target *= 2
-            target = min(target, block_size)
-        pad = np.full((target - len(flat), 2), n_nodes, np.int32)
-        yield jnp.asarray(np.concatenate([flat, pad]))
+        yield from buf.push(block)
+    tail = buf.flush()
+    if tail is not None:
+        yield tail
 
 
 def count_stream(n_nodes: int, blocks, *, block_size: int | None = None,

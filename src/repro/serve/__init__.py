@@ -1,0 +1,9 @@
+"""Serving loops: the LM server and the triangle-counting server.
+
+``serve_loop`` holds the batched request servers (``LMServer``,
+``TriangleServer``); ``sessions`` holds the concurrent multi-stream
+machinery (``StreamMultiplexer`` over ``api.StreamSession``).
+"""
+from repro.serve.sessions import StreamMultiplexer
+
+__all__ = ["StreamMultiplexer"]

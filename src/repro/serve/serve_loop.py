@@ -83,19 +83,27 @@ class TriangleServer:
     is the dense path are grouped by padded-shape bucket and counted with ONE
     vmapped executable call per group (``count_batch``, executed under the
     group's planner plan so the backend kernel decision survives batching);
-    everything else runs its planner-chosen path individually, and streaming
-    requests (``serve_stream``) fold through the same cache. Results come
-    back as per-request
-    ``CountResult``s in request order — counts stay device arrays, so an
-    aggregating caller syncs once, not per request.
+    everything else runs its planner-chosen path individually. Streaming
+    requests run as SESSIONS on ``self.streams`` (a ``StreamMultiplexer``
+    over the same cache): any number may be open at once —
+    ``open_stream``/``feed``/``close_stream`` drive them directly,
+    ``serve_streams`` interleaves a whole list of them round-robin, and
+    ``serve_stream`` keeps the pre-session one-stream signature. Admission is
+    the planner's budget (``admit_session``): sessions whose pinned bitset
+    state would overcommit ``Resources.memory_bytes`` queue host-side instead
+    of OOMing the server. Results come back as per-request ``CountResult``s
+    in request order — counts stay device arrays, so an aggregating caller
+    syncs once, not per request.
     """
 
     def __init__(self, resources=None, serve_cfg: TriangleServeConfig | None = None,
                  mesh=None):
         from repro.api import TriangleCounter
+        from repro.serve.sessions import StreamMultiplexer
 
         self.counter = TriangleCounter(resources, mesh=mesh)
         self.cfg = serve_cfg or TriangleServeConfig()
+        self.streams = StreamMultiplexer(self.counter)
 
     def serve(self, graphs: list) -> list:
         from repro.api import CountResult, bucket
@@ -130,12 +138,53 @@ class TriangleServer:
                     )
         return results
 
+    # -- streaming sessions ------------------------------------------------
+    def open_stream(self, n_nodes: int, *, block_size: int | None = None) -> int:
+        """Open one streaming session on the server's multiplexer; returns
+        its session id (admitted, or queued if the planner's budget says the
+        state would overcommit memory — see ``serve.sessions``)."""
+        return self.streams.open(n_nodes, block_size=block_size)
+
+    def feed(self, sid: int, edges) -> None:
+        """Feed one (B, 2) edge block to an open session."""
+        self.streams.feed(sid, edges)
+
+    def close_stream(self, sid: int):
+        """Finalize a session; returns its ``CountResult`` (idempotent)."""
+        return self.streams.close(sid)
+
+    def serve_streams(self, requests, *, block_size: int | None = None) -> list:
+        """Serve many streaming requests CONCURRENTLY: ``requests`` is a list
+        of ``(n_nodes, blocks-iterable)`` pairs; block ingest is interleaved
+        round-robin across every admitted session in admission order (the
+        paper's serving regime: many dynamically-generated graphs in flight
+        at once, one compile cache, planner-budgeted admission). Sessions are
+        closed in admission order as the interleave finishes, so freed state
+        admits any queued requests FIFO. Returns per-request ``CountResult``s
+        in request order — bit-identical to running each request through
+        ``serve_stream`` sequentially."""
+        its = [iter(blocks) for _, blocks in requests]
+        sids = [self.streams.open(n, block_size=block_size)
+                for n, _ in requests]
+        live = set(range(len(requests)))
+        while live:
+            for i in sorted(live):
+                try:
+                    block = next(its[i])
+                except StopIteration:
+                    live.discard(i)
+                    continue
+                self.streams.feed(sids[i], block)
+        return [self.streams.close(sid) for sid in sids]
+
     def serve_stream(self, n_nodes: int, blocks, *,
                      block_size: int | None = None):
-        """Serve one streaming request (an iterable of (B, 2) edge blocks —
-        the paper's not-memory-resident regime) through the SAME counter as
-        the resident requests: the planner sizes ``n_stages``/``block_size``
-        from the server's resources, and the jitted ingest step lands in the
-        server's compile cache, so repeated streams with one block shape
-        never retrace."""
-        return self.counter.count_stream(n_nodes, blocks, block_size=block_size)
+        """Serve ONE streaming request (an iterable of (B, 2) edge blocks —
+        the paper's not-memory-resident regime): the pre-session signature,
+        kept as a one-session wrapper over the multiplexer. The planner sizes
+        ``n_stages``/``block_size`` from the server's resources, and the
+        jitted ingest step lands in the server's shared compile cache, so
+        repeated (or concurrent) streams with one block shape never
+        retrace."""
+        return self.serve_streams([(n_nodes, blocks)],
+                                  block_size=block_size)[0]

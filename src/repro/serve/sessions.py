@@ -1,0 +1,185 @@
+"""Concurrent multi-stream serving: many ``StreamSession``s, one budget.
+
+``serve_stream`` used to mean one stream at a time per server — the paper's
+"dynamically generated graph" regime capped at a single generator. The
+:class:`StreamMultiplexer` lifts that: it holds any number of open sessions,
+interleaves block ingest across them in admission order, and shares the
+server's ONE ``TriangleCounter`` compile cache, so S concurrent streams
+feeding one block shape cost exactly one trace.
+
+The memory story is the planner's (``api.planner.admit_session``): each
+active session pins its adjacency-so-far bitset — n²/8 bytes dense, n²/8/S
+per stage when the admission plan is ring-sharded — and the multiplexer
+accounts those pinned bytes against ``Resources.memory_bytes`` (the
+per-stage discount only applies when the counter's mesh actually hosts the
+stage axis — host-emulated sharding pays the full bitset). A request that
+does not fit RIGHT NOW is QUEUED, not opened: its feeds buffer host-side
+(numpy, proportional to the edges fed while waiting) and it is admitted
+FIFO — never around an earlier queued request — as active sessions close,
+with the buffered blocks replayed on admission. A request that could never
+fit even on an idle server is rejected at ``open`` instead of queueing
+forever. Queueing trades host buffer for device state; it never
+overcommits the device.
+
+Single-driver concurrency: sessions are interleavable from one thread (the
+serve loop), not thread-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _QueuedStream:
+    n_nodes: int
+    block_size: int | None
+    blocks: list  # host-side numpy buffers, replayed on admission
+
+
+class StreamMultiplexer:
+    """Interleave block ingest across concurrent stream sessions.
+
+    Lifecycle per request: ``open(n_nodes) -> sid`` (admitted or queued per
+    the planner's budget), any number of ``feed(sid, edges)`` in any
+    interleaving with other sessions, then ``close(sid) -> CountResult``
+    (idempotent; closing frees the session's pinned state and admits queued
+    requests FIFO). ``status(sid)`` is ``"active"``/``"queued"``/``"closed"``.
+
+    All sessions run over one :class:`~repro.api.TriangleCounter` (one
+    compile cache). ``block_size`` is the uniform default applied to every
+    session (overridable per ``open``): uniform block shapes are what make S
+    concurrent sessions share a single ingest trace.
+    """
+
+    def __init__(self, counter=None, resources=None, *,
+                 block_size: int | None = None):
+        from repro.api import TriangleCounter
+
+        self.counter = counter or TriangleCounter(resources)
+        self.resources = resources or self.counter.resources
+        self.block_size = block_size
+        self._active: dict[int, object] = {}       # sid -> StreamSession
+        self._queued: OrderedDict[int, _QueuedStream] = OrderedDict()
+        self._results: dict[int, object] = {}      # sid -> CountResult
+        self._state_bytes: dict[int, int] = {}     # sid -> pinned per-stage B
+        self.bytes_in_use = 0
+        self._next_sid = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def open(self, n_nodes: int, *, block_size: int | None = None) -> int:
+        """Admit (or queue) one more stream; returns its session id.
+
+        A stream whose state can NEVER fit — queue verdict even against an
+        idle server — is rejected here with ``ValueError`` instead of being
+        queued forever (its feeds would buffer unboundedly waiting for
+        budget that will never free)."""
+        sid = self._next_sid
+        self._next_sid += 1
+        bs = block_size if block_size is not None else self.block_size
+        if not self._queued:  # FIFO: never admit around an earlier queued one
+            adm = self._admission(n_nodes, self.bytes_in_use)
+            if adm.admitted:
+                self._admit(sid, n_nodes, bs, adm)
+                return sid
+        idle = self._admission(n_nodes, 0)
+        if not idle.admitted:
+            raise ValueError(
+                f"stream of {n_nodes} nodes can never be admitted on this "
+                f"server: {idle.reason}")
+        self._queued[sid] = _QueuedStream(n_nodes, bs, [])
+        return sid
+
+    def feed(self, sid: int, edges) -> None:
+        """Feed one (B, 2) edge array to session ``sid``: ingested through
+        the shared cache if active, buffered host-side if queued."""
+        if sid in self._active:
+            self._active[sid].feed(edges)
+        elif sid in self._queued:
+            self._queued[sid].blocks.append(
+                np.asarray(edges, dtype=np.int32).reshape(-1, 2))
+        elif sid in self._results:
+            raise RuntimeError(f"session {sid} already closed")
+        else:
+            raise KeyError(f"unknown session {sid}")
+
+    def close(self, sid: int):
+        """Finalize ``sid`` and return its ``CountResult`` (idempotent).
+
+        Closing frees the session's pinned state bytes and admits queued
+        requests FIFO. Closing a session that is still QUEUED first retries
+        admission (it may fit now); if other sessions still pin the budget it
+        raises instead of overcommitting — close an active session first.
+        """
+        if sid in self._results:
+            return self._results[sid]
+        if sid in self._queued:
+            self._admit_pending()
+            if sid in self._queued:
+                raise RuntimeError(
+                    f"session {sid} is still queued ({self.bytes_in_use} B "
+                    f"pinned by {len(self._active)} active session(s)) — "
+                    f"close an active session to free budget first")
+        if sid not in self._active:
+            raise KeyError(f"unknown session {sid}")
+        session = self._active.pop(sid)
+        result = session.finalize()
+        self.bytes_in_use -= self._state_bytes.pop(sid)
+        self._results[sid] = result
+        self._admit_pending()
+        return result
+
+    def status(self, sid: int) -> str:
+        if sid in self._active:
+            return "active"
+        if sid in self._queued:
+            return "queued"
+        if sid in self._results:
+            return "closed"
+        raise KeyError(f"unknown session {sid}")
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queued)
+
+    # -- internals ---------------------------------------------------------
+    def _admission(self, n_nodes: int, bytes_in_use: int):
+        """Mesh-aware admission: the planner's n²/8/S-per-stage accounting
+        only holds when the counter's mesh actually hosts the stage axis.
+        Host-EMULATED sharding materializes all S shards on the one real
+        device, so without a matching mesh the decision is re-taken at ring
+        width 1 — the full bitset must fit, or the request queues."""
+        from repro.api.planner import admit_session
+
+        adm = admit_session(n_nodes, self.resources, bytes_in_use=bytes_in_use)
+        if (adm.admitted and adm.plan.n_stages > 1
+                and not self.counter._mesh_matches(adm.plan.n_stages)):
+            adm = admit_session(
+                n_nodes, dataclasses.replace(self.resources, max_stages=1),
+                bytes_in_use=bytes_in_use)
+        return adm
+
+    def _admit(self, sid: int, n_nodes: int, block_size: int | None, adm) -> None:
+        self._active[sid] = self.counter.open_stream(
+            n_nodes, plan=adm.plan, block_size=block_size)
+        self._state_bytes[sid] = adm.state_bytes
+        self.bytes_in_use += adm.state_bytes
+
+    def _admit_pending(self) -> None:
+        """Admit queued requests FIFO while the freed budget allows,
+        replaying each one's host-buffered blocks."""
+        while self._queued:
+            sid, q = next(iter(self._queued.items()))
+            adm = self._admission(q.n_nodes, self.bytes_in_use)
+            if not adm.admitted:
+                return
+            del self._queued[sid]
+            self._admit(sid, q.n_nodes, q.block_size, adm)
+            for b in q.blocks:
+                self._active[sid].feed(b)

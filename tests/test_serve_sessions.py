@@ -1,0 +1,338 @@
+"""Concurrent multi-stream serving sessions: StreamSession /
+StreamMultiplexer / planner admission. No hypothesis dependency — this
+module always runs in tier-1.
+
+The acceptance pin for the serving PR lives here: ≥ 4 interleaved sessions
+must be bit-identical to sequential ``count_stream`` runs with exactly one
+ingest trace per block shape shared across all sessions
+(`test_four_sessions_one_trace_per_block_shape`)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import Plan, Resources, TriangleCounter, admit_session
+from repro.core import streaming
+from repro.core.triangle_ref import count_triangles_brute
+from repro.graphs import generators as gen
+from repro.serve.serve_loop import TriangleServer
+from repro.serve.sessions import StreamMultiplexer
+
+
+def _noisy_stream(g, *, seed=0, block=31, dups=5, self_loops=2):
+    """Shuffled ragged blocks with duplicate/self-loop noise the ingest must
+    ignore."""
+    rng = np.random.default_rng(seed)
+    edges = g.edges[rng.permutation(g.n_edges)]
+    parts = [edges]
+    if dups:
+        parts.append(edges[rng.integers(0, g.n_edges, size=dups)])
+    if self_loops:
+        loops = rng.integers(0, g.n_nodes, size=self_loops)
+        parts.append(np.stack([loops, loops], axis=1).astype(np.int32))
+    stream = np.concatenate(parts)
+    stream = stream[rng.permutation(len(stream))]
+    return [stream[i:i + block] for i in range(0, len(stream), block)]
+
+
+# --------------------------------------------------------------------------
+# Interleaved == sequential (the core parity contract)
+# --------------------------------------------------------------------------
+def test_interleaved_sessions_bit_identical_to_sequential():
+    graphs = [gen.gnp(n, 0.4, seed=n) for n in (43, 49, 57, 63, 69)]
+    blocks = [_noisy_stream(g, seed=i, block=19 + 4 * i)
+              for i, g in enumerate(graphs)]
+    seq = [TriangleCounter().count_stream(g.n_nodes, bs)
+           for g, bs in zip(graphs, blocks)]
+    inter = TriangleServer().serve_streams(
+        [(g.n_nodes, bs) for g, bs in zip(graphs, blocks)])
+    for g, s, r in zip(graphs, seq, inter):
+        want = count_triangles_brute(g)
+        assert s.item() == want
+        assert r.item() == want
+        # bit-identical: same device value, same dtype — not just same int
+        assert np.asarray(s.count) == np.asarray(r.count)
+        assert np.asarray(s.count).dtype == np.asarray(r.count).dtype
+        assert r.stats["session"] is True
+
+
+def test_interleaved_sharded_sessions_match_sequential():
+    """Ring-sharded (host-emulated) sessions interleave like dense ones."""
+    graphs = [gen.gnp(64, 0.5, seed=s) for s in (3, 5)]
+    blocks = [_noisy_stream(g, seed=s, block=17) for s, g in enumerate(graphs)]
+    p = Plan(method="stream", n_stages=3, block_size=17)
+    c = TriangleCounter(plan=p)
+    sessions = [c.open_stream(64) for _ in graphs]
+    longest = max(len(b) for b in blocks)
+    for j in range(longest):  # round-robin, ragged tails and all
+        for s, bs in zip(sessions, blocks):
+            if j < len(bs):
+                s.feed(bs[j])
+    for g, s in zip(graphs, sessions):
+        res = s.finalize()
+        assert res.item() == count_triangles_brute(g)
+        assert res.stats["sharded"] is True and res.stats["n_stages"] == 3
+
+
+def test_four_sessions_one_trace_per_block_shape():
+    """THE acceptance pin: 4 concurrent sessions over one server, one block
+    shape -> counts bit-identical to sequential count_stream and exactly ONE
+    ingest trace shared across all of them. n/block are unique to this test
+    so the process-wide jit cache cannot hide a second trace."""
+    n, block = 107, 23
+    graphs = [gen.gnp(n, 0.3, seed=70 + s) for s in range(4)]
+    blocks = [[g.edges[i:i + block] for i in range(0, g.n_edges, block)]
+              for g in graphs]
+    before = streaming.ingest_trace_count()
+    server = TriangleServer()
+    inter = server.serve_streams([(n, bs) for bs in blocks], block_size=block)
+    assert streaming.ingest_trace_count() - before == 1
+    seq = [TriangleCounter().count_stream(n, bs, block_size=block)
+           for bs in blocks]
+    for g, s, r in zip(graphs, seq, inter):
+        assert r.item() == s.item() == count_triangles_brute(g)
+        assert np.asarray(s.count) == np.asarray(r.count)
+    # sequential reruns on the server retrace nothing either
+    before = streaming.ingest_trace_count()
+    for bs in blocks:
+        server.serve_stream(n, bs, block_size=block)
+    assert streaming.ingest_trace_count() - before == 0
+    # one compile-cache entry serves all 8 session opens
+    skeys = [k for k in server.counter._cache
+             if isinstance(k[1], tuple) and k[1][:2] == ("stream", n)]
+    assert len(skeys) == 1
+
+
+# --------------------------------------------------------------------------
+# Session handle lifecycle
+# --------------------------------------------------------------------------
+def test_session_finalize_idempotent_and_feed_after_close_raises():
+    g = gen.gnp(38, 0.5, seed=2)
+    s = TriangleCounter().open_stream(38, block_size=16)
+    s.feed(g.edges)
+    r1 = s.finalize()
+    assert r1.item() == count_triangles_brute(g)
+    assert s.finalize() is r1
+    with pytest.raises(RuntimeError, match="finalized"):
+        s.feed(g.edges[:4])
+
+
+def test_open_stream_rejects_non_stream_plan():
+    with pytest.raises(ValueError, match="method='stream'"):
+        TriangleCounter().open_stream(20, plan=Plan(method="dense"))
+
+
+def test_session_ragged_feeds_reblock_to_fixed_shape():
+    """Feeds of any raggedness produce only block_size-shaped ingests plus
+    one padded tail of the same shape."""
+    g = gen.gnp(71, 0.4, seed=9)
+    s = TriangleCounter().open_stream(71, block_size=64)
+    rng = np.random.default_rng(0)
+    i = 0
+    while i < g.n_edges:
+        step = int(rng.integers(1, 150))
+        s.feed(g.edges[i:i + step])
+        i += step
+    res = s.finalize()
+    assert res.item() == count_triangles_brute(g)
+    assert res.stats["n_blocks"] == -(-g.n_edges // 64)
+
+
+# --------------------------------------------------------------------------
+# Planner admission
+# --------------------------------------------------------------------------
+def test_admission_dense_sharded_queue_regimes():
+    # plenty of budget: the whole n²/8 bitset fits on one stage
+    a = admit_session(1000, Resources())
+    assert a.action == "admit-dense" and a.admitted
+    assert a.plan.method == "stream" and a.plan.n_stages == 1
+    assert a.state_bytes == 4 * 1000 * (-(-1000 // 32))
+    # 1.25 GB state on 256 MB devices: only a column shard fits per stage
+    a = admit_session(100_000, Resources(n_devices=8, memory_bytes=256 << 20))
+    assert a.action == "admit-sharded"
+    assert a.plan.n_stages > 1 and a.state_bytes <= 256 << 20
+    # even the full ring width cannot hold a shard: queue, no plan
+    a = admit_session(100_000, Resources(n_devices=2, memory_bytes=64 << 20))
+    assert a.action == "queue" and not a.admitted and a.plan is None
+
+
+def test_admission_accounts_bytes_in_use():
+    res = Resources(memory_bytes=20480)  # fits two 8 KB sessions, not three
+    state = admit_session(256, res).state_bytes
+    assert state == 8192
+    assert admit_session(256, res, bytes_in_use=state).admitted
+    assert admit_session(256, res, bytes_in_use=2 * state).action == "queue"
+
+
+# --------------------------------------------------------------------------
+# Multiplexer admission: over-budget queues (never OOMs), FIFO replay
+# --------------------------------------------------------------------------
+def test_over_budget_session_queues_then_replays_exactly():
+    res = Resources(memory_bytes=20480)  # two 256-node sessions fit
+    mux = StreamMultiplexer(TriangleCounter(res), block_size=64)
+    graphs = [gen.gnp(256, 0.05, seed=s) for s in range(3)]
+    sids = [mux.open(256) for _ in graphs]
+    assert [mux.status(s) for s in sids] == ["active", "active", "queued"]
+    assert mux.bytes_in_use == 2 * 8192
+    # interleave feeds: the queued session buffers host-side, no state grows
+    for start in range(0, max(g.n_edges for g in graphs), 64):
+        for sid, g in zip(sids, graphs):
+            if start < g.n_edges:
+                mux.feed(sid, g.edges[start:start + 64])
+    assert mux.status(sids[2]) == "queued"
+    # closing the queued session while actives pin the budget refuses --
+    # queueing instead of OOMing is the whole contract
+    with pytest.raises(RuntimeError, match="queued"):
+        mux.close(sids[2])
+    r0 = mux.close(sids[0])  # frees 8 KB -> FIFO admission replays session 2
+    assert mux.status(sids[2]) == "active"
+    r1, r2 = mux.close(sids[1]), mux.close(sids[2])
+    for g, r in zip(graphs, (r0, r1, r2)):
+        assert r.item() == count_triangles_brute(g)
+    assert mux.bytes_in_use == 0
+    # close is idempotent
+    assert mux.close(sids[2]) is r2
+    with pytest.raises(RuntimeError, match="closed"):
+        mux.feed(sids[2], graphs[2].edges[:4])
+
+
+def test_emulated_sharding_does_not_discount_admission():
+    """Regression: the planner's n²/8/S-per-stage accounting only holds on a
+    real mesh. Without one, the 'sharded' state keeps all S shards on the
+    single host device, so the multiplexer must NOT admit a 1.25 GB state
+    against a 256 MB budget just because one shard would fit."""
+    res = Resources(n_devices=8, memory_bytes=256 << 20)
+    assert admit_session(100_000, res).action == "admit-sharded"  # mesh model
+    mux = StreamMultiplexer(TriangleCounter(res))  # no mesh -> emulated
+    with pytest.raises(ValueError, match="never be admitted"):
+        mux.open(100_000)
+    assert mux.bytes_in_use == 0 and mux.n_active == 0 and mux.n_queued == 0
+
+
+def test_never_fitting_stream_rejected_at_open_not_queued_forever():
+    """A stream that cannot fit even on an idle server raises at open();
+    one that merely has to wait for actives to close still queues."""
+    res = Resources(memory_bytes=20480)
+    mux = StreamMultiplexer(TriangleCounter(res), block_size=64)
+    with pytest.raises(ValueError, match="never be admitted"):
+        mux.open(4096)  # 2 MB bitset vs 20 KB budget: hopeless
+    a, b = mux.open(256), mux.open(256)   # pin the whole budget
+    waiting = mux.open(256)               # fits an idle server -> queue, no raise
+    assert mux.status(waiting) == "queued"
+    mux.close(a)
+    assert mux.status(waiting) == "active"
+    mux.close(b), mux.close(waiting)
+
+
+def test_close_unknown_session_raises_with_message():
+    mux = StreamMultiplexer(TriangleCounter())
+    with pytest.raises(KeyError, match="unknown session"):
+        mux.close(999)
+
+
+def test_later_open_does_not_jump_queue():
+    """FIFO fairness: once anything is queued, a later open queues behind it
+    even if it would fit the remaining budget."""
+    res = Resources(memory_bytes=20480)
+    mux = StreamMultiplexer(TriangleCounter(res), block_size=64)
+    big0, big1 = mux.open(256), mux.open(256)   # pin the whole budget
+    waiting = mux.open(256)                      # queued
+    tiny = mux.open(16)                          # would fit (128 B) but FIFO
+    assert mux.status(waiting) == "queued" and mux.status(tiny) == "queued"
+    mux.close(big0)
+    assert mux.status(waiting) == "active"  # head admitted first
+    assert mux.status(tiny) == "active"     # then the tiny one also fits
+    for sid in (big1, waiting, tiny):
+        mux.close(sid)
+
+
+def test_serve_stream_wrapper_rides_sessions():
+    server = TriangleServer()
+    g = gen.gnp(59, 0.4, seed=21)
+    res = server.serve_stream(59, [g.edges[i:i + 25] for i in range(0, g.n_edges, 25)])
+    assert res.item() == count_triangles_brute(g)
+    assert res.plan.method == "stream" and res.stats["session"] is True
+    assert server.streams.n_active == 0 and server.streams.bytes_in_use == 0
+
+
+# --------------------------------------------------------------------------
+# BlockBuffer (the incremental padded_blocks behind every session)
+# --------------------------------------------------------------------------
+def test_block_buffer_matches_padded_blocks():
+    g = gen.gnp(33, 0.6, seed=4)
+    chunks = [g.edges[i:i + 7] for i in range(0, g.n_edges, 7)]
+    want = [np.asarray(b) for b in streaming.padded_blocks(chunks, 33, block_size=20)]
+    buf = streaming.BlockBuffer(33, block_size=20)
+    got = []
+    for c in chunks:
+        got.extend(np.asarray(b) for b in buf.push(c))
+    tail = buf.flush()
+    if tail is not None:
+        got.append(np.asarray(tail))
+    assert len(want) == len(got)
+    for w, b in zip(want, got):
+        assert np.array_equal(w, b)
+    assert buf.flush() is None  # drained
+
+
+def test_block_buffer_never_filled_pads_pow2():
+    buf = streaming.BlockBuffer(50, block_size=1 << 20)
+    assert buf.push(np.array([[1, 2], [2, 3], [1, 3]])) == []
+    tail = buf.flush()
+    assert tail.shape == (8, 2)  # pow2 floor, not the 1M block
+
+
+# --------------------------------------------------------------------------
+# Sharded sessions on a real (forced host) device mesh
+# --------------------------------------------------------------------------
+MESH_SESSIONS_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.api import Plan, TriangleCounter
+    from repro.core.triangle_ref import count_triangles_brute
+    from repro.graphs import generators as gen
+    from repro.launch.mesh import make_ring_mesh
+
+    mesh = make_ring_mesh(8)
+    c = TriangleCounter(plan=Plan(method="stream", n_stages=8, block_size=300),
+                        mesh=mesh)
+    graphs = [gen.gnp(200, 0.2, seed=s) for s in (11, 13)]
+    blocks = []
+    for g in graphs:
+        rng = np.random.default_rng(g.n_edges)
+        e = g.edges[rng.permutation(g.n_edges)]
+        blocks.append([e[i:i + 300] for i in range(0, len(e), 300)])
+    # interleaved mesh-sharded sessions...
+    sessions = [c.open_stream(200) for _ in graphs]
+    for j in range(max(len(b) for b in blocks)):
+        for s, bs in zip(sessions, blocks):
+            if j < len(bs):
+                s.feed(bs[j])
+    inter = [s.finalize() for s in sessions]
+    # ...against sequential count_stream on a fresh counter
+    c2 = TriangleCounter(plan=Plan(method="stream", n_stages=8, block_size=300),
+                         mesh=mesh)
+    for g, r, bs in zip(graphs, inter, blocks):
+        want = count_triangles_brute(g)
+        seq = c2.count_stream(200, bs)
+        assert r.item() == want == seq.item(), (r.item(), seq.item(), want)
+        assert r.stats["on_mesh"] and r.stats["sharded"], r.stats
+    print("MESH_SESSIONS_OK", [r.item() for r in inter])
+    """
+)
+
+
+@pytest.mark.slow
+def test_interleaved_sharded_sessions_on_eight_devices_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", MESH_SESSIONS_SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    assert "MESH_SESSIONS_OK" in r.stdout

@@ -37,6 +37,14 @@ rs = counter.count_stream(graph.n_nodes, blocks)
 print(f"stream (bitset fold):          {rs.item()}  "
       f"[{rs.stats['n_blocks']} blocks, {rs.stats['ingest_traces']} trace(s)]")
 
+# Sliding window: count over the last E epochs only — deletions via an
+# epoch-rotated bitset ring (docs/STREAMING.md §5; full tour:
+# examples/windowed_stream.py).
+epochs = [[graph.edges[i:i + 1024]] for i in range(0, graph.n_edges, 1024)]
+rw = counter.count_windowed(graph.n_nodes, epochs, window=4)
+print(f"sliding window (last 4 of {rw.stats['epochs_advanced'] + 1} epochs): "
+      f"{rw.item()}  [{rw.stats['n_blocks']} blocks, 1 slot clear per slide]")
+
 # Batched: many small graphs, one vmapped executable.
 small = [gen.gnp(60, 0.3, seed=s) for s in range(4)]
 rb = counter.count_batch(small)

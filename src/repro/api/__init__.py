@@ -27,7 +27,11 @@ Plan method → paper section map:
   counted when its last edge arrives. Plans carry planner-sized
   ``n_stages``/``block_size`` (``stream_sizing``): the two-phase blocked
   ingest replaces the per-edge scan, and ``n_stages > 1`` column-shards the
-  adjacency state over the ring (n²/8/S bytes per device).
+  adjacency state over the ring (n²/8/S bytes per device). Plans with
+  ``window_epochs = E > 0`` count over a SLIDING WINDOW of the last E
+  epochs — a ring of E epoch bitsets (E·n²/8, /S per stage) rotated by a
+  single slot clear per slide (``TriangleCounter.count_windowed``,
+  ``StreamSession.advance``; docs/STREAMING.md).
 
 Streams are served concurrently through sessions:
 ``TriangleCounter.open_stream`` returns a ``StreamSession`` handle

@@ -124,7 +124,8 @@ class TriangleCounter:
                            wall_s=time.perf_counter() - t0, stats=stats)
 
     def open_stream(self, n_nodes: int, *, plan: Plan | None = None,
-                    block_size: int | None = None) -> "StreamSession":
+                    block_size: int | None = None,
+                    window: int | None = None) -> "StreamSession":
         """Open a :class:`StreamSession` — the handle behind every streaming
         entry point (``count_stream`` is open → feed → finalize in one call;
         the serve loop's ``StreamMultiplexer`` interleaves many).
@@ -137,17 +138,33 @@ class TriangleCounter:
         method is not ``"stream"`` are rejected — silently streaming under a
         dense/ring plan would ignore every knob the caller thought they set.
 
+        ``window = E`` opens a SLIDING-WINDOW session (state: a ring of E
+        epoch bitsets, E·n²/8 bytes, /S per stage — see
+        ``core.streaming.init_windowed_state``): ``feed`` lands edges in the
+        current epoch, :meth:`StreamSession.advance` slides the window, and
+        ``finalize`` returns the live window's count. When a plan is also
+        resolved, its ``window_epochs`` must agree with ``window`` (pass one
+        or the other); with no plan the planner is asked for a windowed
+        stream plan (E-scaled sizing).
+
         The session's jitted ingest step registers in THIS counter's compile
         cache under ``(plan.cache_key(), ("stream", n_nodes, block_size,
-        on_mesh))``, and the underlying ingest functions are module-level
-        jits keyed by block shape — so S concurrent sessions feeding one
-        block shape cost exactly one trace, shared across all of them.
+        on_mesh))`` — ``cache_key`` includes ``window_epochs`` — and the
+        underlying ingest functions are module-level jits keyed by block
+        shape, so S concurrent sessions feeding one block shape cost exactly
+        one trace, shared across all of them AND across every epoch of a
+        windowed session (epoch advances rotate a traced head).
         """
         p = plan or self.fixed_plan
         if p is None:
             stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
                                max_degree=0, max_fwd_degree=0, edges_in_memory=False)
-            p = plan_fn(stats, self.resources)
+            p = plan_fn(stats, self.resources, window_epochs=window or 0)
+        elif window is not None and p.window_epochs != window:
+            raise ValueError(
+                f"window={window} conflicts with the resolved plan's "
+                f"window_epochs={p.window_epochs} — pass the window through "
+                f"the plan OR the argument, not both")
         if p.method != "stream":
             raise ValueError(
                 f"count_stream requires a plan with method='stream', got "
@@ -175,6 +192,39 @@ class TriangleCounter:
             session.feed(b)
         return session.finalize()
 
+    def count_windowed(self, n_nodes: int, epochs: Iterable, *,
+                       window: int | None = None, plan: Plan | None = None,
+                       block_size: int | None = None) -> CountResult:
+        """Count triangles over a SLIDING WINDOW of an edge stream: consume
+        an iterable of EPOCHS — each itself an iterable of (B, 2) edge
+        blocks — and return the triangle count of the final window (the last
+        ``window`` epochs). A one-session wrapper over :meth:`open_stream`
+        with ``window=``: each epoch is fed, the window advances between
+        epochs (``StreamSession.advance`` — a single epoch-slot clear, no
+        per-edge deletes), and ``finalize`` reads the live count.
+
+        Plan resolution and cache keying follow :meth:`open_stream`; the
+        session pins E·n²/8 bytes (E epoch bitsets; /S per stage when the
+        plan ring-shards) and the whole stream costs one ingest trace per
+        block shape regardless of how many epochs it spans."""
+        p = plan or self.fixed_plan
+        if not window and (p is None or not p.window_epochs):
+            # validate BEFORE open_stream allocates state and registers a
+            # compile-cache entry for a session that would never run
+            raise ValueError(
+                "count_windowed needs a windowed session — pass window=E or "
+                "a plan with window_epochs > 0")
+        session = self.open_stream(n_nodes, plan=plan, block_size=block_size,
+                                   window=window)
+        first = True
+        for epoch_blocks in epochs:
+            if not first:
+                session.advance()
+            first = False
+            for b in epoch_blocks:
+                session.feed(b)
+        return session.finalize()
+
     def _make_stream(self, entry: _Entry, p: Plan, on_mesh: bool):
         from functools import partial as _partial
 
@@ -184,6 +234,14 @@ class TriangleCounter:
         # fresh cache entry stands for at most one trace per fixed-shape
         # stream (see streaming.ingest_trace_count for the exact telemetry).
         entry.traces += 1
+        if p.window_epochs:
+            if p.n_stages > 1:
+                if on_mesh:
+                    return streaming.make_mesh_ingest_windowed(
+                        self.mesh, use_kernel=p.use_kernel, interpret=p.interpret)
+                return streaming.ingest_block_windowed_sharded
+            return _partial(streaming.ingest_block_windowed,
+                            use_kernel=p.use_kernel, interpret=p.interpret)
         if p.n_stages > 1:
             if on_mesh:
                 return streaming.make_mesh_ingest(
@@ -417,7 +475,8 @@ class StreamSession:
     """One in-flight streaming count: open → ``feed`` blocks → ``finalize``.
 
     The handle owns this stream's state — the adjacency-so-far bitset
-    (n²/8 bytes dense, n²/8/S per stage when the plan is ring-sharded) plus a
+    (n²/8 bytes dense, n²/8/S per stage when the plan is ring-sharded; for a
+    windowed plan a ring of E epoch bitsets, E·n²/8 and E·n²/8/S) plus a
     :class:`~repro.core.streaming.BlockBuffer` that re-blocks ragged feeds to
     one fixed shape — and borrows everything compiled from the counter that
     opened it: many sessions over one counter share one compile cache, so S
@@ -427,11 +486,16 @@ class StreamSession:
     itself is not thread-safe).
 
     ``feed`` ingests every full block the new edges completed and buffers the
-    remainder host-side (at most ``block_size - 1`` edges). ``finalize``
-    flushes the padded tail, returns the :class:`CountResult`, and is
-    idempotent — later calls return the same result; later ``feed`` calls
-    raise. ``state_bytes`` is the per-stage device footprint the session pins
-    while open — the number the serve loop's admission accounting charges.
+    remainder host-side (at most ``block_size - 1`` edges). Windowed sessions
+    (``plan.window_epochs = E > 0``) add :meth:`advance`: flush the current
+    epoch's tail and slide the window one epoch — a single epoch-slot clear,
+    no per-edge deletes, never a retrace (the ring head is a traced scalar).
+    ``finalize`` flushes the padded tail, returns the :class:`CountResult`
+    (the running total for unbounded sessions, the LIVE WINDOW's count for
+    windowed ones), and is idempotent — later calls return the same result;
+    later ``feed``/``advance`` calls raise. ``state_bytes`` is the per-stage
+    device footprint the session pins while open — the number the serve
+    loop's admission accounting charges.
     """
 
     def __init__(self, counter: TriangleCounter, n_nodes: int, plan: Plan,
@@ -448,7 +512,14 @@ class StreamSession:
             self._key, lambda e: counter._make_stream(e, plan, on_mesh))
         self._cache_hit = self._entry.hits > 0
         self._on_mesh = on_mesh
-        if plan.n_stages > 1:
+        if plan.window_epochs:
+            if plan.n_stages > 1:
+                self.state = streaming.init_windowed_sharded_state(
+                    n_nodes, plan.window_epochs, plan.n_stages)
+            else:
+                self.state = streaming.init_windowed_state(
+                    n_nodes, plan.window_epochs)
+        elif plan.n_stages > 1:
             self.state = streaming.init_sharded_state(n_nodes, plan.n_stages)
         else:
             self.state = streaming.init_state(n_nodes)
@@ -456,12 +527,16 @@ class StreamSession:
         # stage axis; the WHOLE array when the sharding is host-emulated —
         # emulation keeps all S shards on one device, so admission budgets
         # must charge all of them
-        nbytes = int(self.state["adj"].nbytes)
+        nbytes = int(self._bitset_state().nbytes)
         self.state_bytes = nbytes // plan.n_stages if on_mesh else nbytes
         self.n_blocks = 0
+        self.n_epochs_advanced = 0
         self._traces0 = streaming.ingest_trace_count()
         self._wall = 0.0
         self.result: CountResult | None = None
+
+    def _bitset_state(self):
+        return self.state["epochs" if self.plan.window_epochs else "adj"]
 
     @property
     def closed(self) -> bool:
@@ -469,7 +544,8 @@ class StreamSession:
 
     def feed(self, edges) -> None:
         """Buffer ``edges`` ((B, 2) array-like, any B including ragged);
-        ingest every full ``block_size`` block they completed."""
+        ingest every full ``block_size`` block they completed (into the
+        CURRENT epoch for windowed sessions)."""
         if self.result is not None:
             raise RuntimeError("session already finalized")
         t0 = time.perf_counter()
@@ -478,14 +554,44 @@ class StreamSession:
             self.n_blocks += 1
         self._wall += time.perf_counter() - t0
 
+    def advance(self) -> None:
+        """Slide a WINDOWED session's window by one epoch: the buffered tail
+        of the closing epoch is flushed and ingested first (epoch boundaries
+        bind edges to the epoch they were fed in), then the ring rotates —
+        the oldest epoch's bitset and count slot are cleared in one shot
+        (``core.streaming.expire_epoch``; no per-edge deletes). The rotation
+        itself never retraces (the ring head is a traced scalar); a flushed
+        ragged tail compiles once per distinct tail shape, and the tail
+        shape is sticky across epochs (``BlockBuffer.flush``), so uniform
+        epochs cost one trace total. Raises on unbounded sessions and after
+        ``finalize``."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        if not self.plan.window_epochs:
+            raise RuntimeError(
+                "advance() is for windowed sessions — open with window=E "
+                "(or a plan with window_epochs > 0)")
+        from repro.core import streaming
+
+        t0 = time.perf_counter()
+        tail = self._buffer.flush()
+        if tail is not None:
+            self.state = self._entry.fn(self.state, tail)
+            self.n_blocks += 1
+        self.state = streaming.expire_epoch(self.state)
+        self.n_epochs_advanced += 1
+        self._wall += time.perf_counter() - t0
+
     def finalize(self) -> CountResult:
         """Flush the padded tail block and return the stream's
-        :class:`CountResult` (idempotent). ``wall_s`` is the time spent
-        inside ``feed``/``finalize`` — idle time between interleaved feeds is
-        not charged to the session. ``stats["ingest_traces"]`` counts global
-        ingest traces over the session's lifetime, so with interleaved
-        sessions it attributes the one shared trace to whichever session fed
-        the shape first."""
+        :class:`CountResult` (idempotent): the running total for unbounded
+        sessions, the live window's count (``counts.sum()`` over the epoch
+        ring) for windowed ones. ``wall_s`` is the time spent inside
+        ``feed``/``advance``/``finalize`` — idle time between interleaved
+        feeds is not charged to the session. ``stats["ingest_traces"]``
+        counts global ingest traces over the session's lifetime, so with
+        interleaved sessions it attributes the one shared trace to whichever
+        session fed the shape first."""
         if self.result is not None:
             return self.result
         from repro.core import streaming
@@ -497,16 +603,20 @@ class StreamSession:
             self.n_blocks += 1
         self._wall += time.perf_counter() - t0
         p = self.plan
-        self.result = CountResult(
-            count=self.state["count"], plan=p, wall_s=self._wall,
-            stats={"n_blocks": self.n_blocks, "block_size": self.block_size,
-                   "n_stages": p.n_stages, "sharded": p.n_stages > 1,
-                   "on_mesh": self._on_mesh, "session": True,
-                   "state_bytes": int(self.state["adj"].nbytes),
-                   "cache": {"key": self._key, "hit": self._cache_hit,
-                             "traces": self._entry.traces},
-                   "ingest_traces": streaming.ingest_trace_count() - self._traces0},
-        )
+        count = (streaming.window_count(self.state) if p.window_epochs
+                 else self.state["count"])
+        stats = {"n_blocks": self.n_blocks, "block_size": self.block_size,
+                 "n_stages": p.n_stages, "sharded": p.n_stages > 1,
+                 "on_mesh": self._on_mesh, "session": True,
+                 "state_bytes": int(self._bitset_state().nbytes),
+                 "cache": {"key": self._key, "hit": self._cache_hit,
+                           "traces": self._entry.traces},
+                 "ingest_traces": streaming.ingest_trace_count() - self._traces0}
+        if p.window_epochs:
+            stats["window_epochs"] = p.window_epochs
+            stats["epochs_advanced"] = self.n_epochs_advanced
+        self.result = CountResult(count=count, plan=p, wall_s=self._wall,
+                                  stats=stats)
         return self.result
 
 

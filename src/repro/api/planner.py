@@ -129,6 +129,7 @@ class Plan:
     edge_batch: int = 4096  # sparse intersection batch
     node_batch: int = 256  # mapreduce reducer batch
     block_size: int = 65536  # streaming ingest block
+    window_epochs: int = 0  # stream plans: sliding window of E epochs (0 = unbounded)
     predicted_bytes: int = 0
     predicted_cost: float = 0.0
     reason: str = ""
@@ -137,7 +138,8 @@ class Plan:
         """The static part of the compile-cache key (shape bucket is added
         by the counter)."""
         return (self.method, self.n_stages, self.use_kernel, self.interpret,
-                self.balance, self.edge_batch, self.node_batch, self.block_size)
+                self.balance, self.edge_batch, self.node_batch, self.block_size,
+                self.window_epochs)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -189,23 +191,31 @@ def _predict(stats: GraphStats, res: Resources, method: str, n_stages: int) -> t
     raise ValueError(f"unknown method {method!r}")
 
 
-def stream_sizing(stats: GraphStats, res: Resources) -> tuple[int, int, int]:
+def stream_sizing(stats: GraphStats, res: Resources, *,
+                  window_epochs: int = 0) -> tuple[int, int, int]:
     """(n_stages, block_size, shard_bytes) for a stream plan.
 
     n_stages: smallest ring width whose per-stage column shard of the
-    adjacency bitset (n · ceil(W/S) · 4 ≈ n²/8/S bytes) fits the memory
-    budget, capped at the ring width (``max_stages`` or ``n_devices``).
+    adjacency bitset (n · ceil(W/S) · 4 ≈ n²/8/S bytes — ×E for a sliding
+    window of ``window_epochs`` epoch bitsets) fits the memory budget,
+    capped at the ring width (``max_stages`` or ``n_devices``).
     block_size: largest power of two in [4k, 1M] whose ingest working set
-    (~8 gathered word-rows per edge) stays within 1/8 of the budget — big
-    blocks amortize dispatch, but must not evict the state shard."""
+    (~8 gathered word-rows per edge; the windowed sweep gathers from E
+    age-cumulative tables, so it scales ×E too) stays within 1/8 of the
+    budget — big blocks amortize dispatch, but must not evict the state
+    shard. ``shard_bytes`` is the PER-STAGE pinned state — the number
+    :func:`admit_session` charges."""
+    if window_epochs < 0:
+        raise ValueError(f"window_epochs must be >= 0, got {window_epochs}")
     n = max(stats.n_nodes, 1)
     w = -(-n // 32)
+    ef = max(window_epochs, 1)  # epoch bitsets pinned per stage
     max_stages = max(1, res.max_stages or res.n_devices)
     n_stages = 1
-    while n_stages < max_stages and 4 * n * (-(-w // n_stages)) > res.memory_bytes:
+    while n_stages < max_stages and ef * 4 * n * (-(-w // n_stages)) > res.memory_bytes:
         n_stages += 1
-    shard_bytes = 4 * n * (-(-w // n_stages))
-    per_edge_bytes = 8 * 4 * (-(-w // n_stages)) + 8
+    shard_bytes = ef * 4 * n * (-(-w // n_stages))
+    per_edge_bytes = ef * 8 * 4 * (-(-w // n_stages)) + 8
     budget = max(res.memory_bytes // _STREAM_BLOCK_MEM_FRACTION, 1 << 20)
     block_size = _STREAM_BLOCK_MIN
     while block_size < _STREAM_BLOCK_MAX and 2 * block_size * per_edge_bytes <= budget:
@@ -223,7 +233,7 @@ def backend_exec_flags(res: Resources) -> dict:
 
 
 def plan(stats: GraphStats, resources: Resources | None = None, *,
-         allow: set[str] | None = None) -> Plan:
+         allow: set[str] | None = None, window_epochs: int = 0) -> Plan:
     """Choose the counting method for ``stats`` under ``resources``.
 
     ``allow`` restricts the candidate set (e.g. ``{"mapreduce"}`` to force the
@@ -231,6 +241,12 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
     reserved for graphs that are not memory-resident. The winner is the
     memory-feasible candidate with the lowest predicted cost; if nothing fits,
     the smallest-footprint candidate is returned with a warning reason.
+
+    ``window_epochs > 0`` asks for SLIDING-WINDOW streaming (only valid for
+    non-resident stats): the plan's state is a ring of E epoch bitsets —
+    E·n²/8 bytes, /S per stage — so sizing and admission charge E× the
+    unbounded stream state, and the two-phase ingest runs one closure sweep
+    per epoch age (cost ×E).
 
     This is the LAST step of every counter entry point's plan resolution
     (explicit ``plan=`` argument, else the counter's fixed plan, else this
@@ -250,20 +266,31 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
         # executable shape is the streaming fold over edge blocks.
         if allow is not None and "stream" not in allowed:
             raise ValueError("graph is not memory-resident; only 'stream' can run")
+        if window_epochs < 0:
+            raise ValueError(f"window_epochs must be >= 0, got {window_epochs}")
+        ef = max(window_epochs, 1)
         nbytes, cost = _predict(stats, res, "stream", 1)
-        n_stages, block_size, shard_bytes = stream_sizing(stats, res)
+        nbytes, cost = ef * nbytes, ef * cost  # E epoch bitsets, E sweeps/block
+        n_stages, block_size, shard_bytes = stream_sizing(
+            stats, res, window_epochs=window_epochs)
         fits = shard_bytes <= res.memory_bytes
         shape = (f"ring-sharded ({n_stages} stages, ~{shard_bytes >> 20} MB/stage) "
                  if n_stages > 1 else "")
+        window = (f"windowed ({window_epochs}-epoch ring) " if window_epochs else "")
         return Plan(
             method="stream", n_stages=n_stages, block_size=block_size,
+            window_epochs=window_epochs,
             predicted_bytes=nbytes, predicted_cost=cost,
             **backend_exec_flags(res),
-            reason=f"edges not memory-resident -> {shape}streaming bitset fold"
+            reason=f"edges not memory-resident -> {window}{shape}streaming bitset fold"
                    + ("" if fits else
                       " (WARNING: bitset state shard exceeds memory budget even "
                       f"at the full ring width {n_stages})"),
         )
+    if window_epochs:
+        raise ValueError(
+            "window_epochs is a streaming knob: sliding windows only apply to "
+            "non-memory-resident stats (edges_in_memory=False)")
     if allow is None:
         allowed.discard("stream")  # stream is for non-resident inputs only
 
@@ -327,7 +354,8 @@ class Admission:
     is left — the request must wait for an active session to close instead of
     OOMing the server). ``state_bytes`` is the per-stage bytes the session
     will pin while open — what the multiplexer adds to its in-use accounting
-    on admit.
+    on admit. Windowed sessions (``plan.window_epochs = E > 0``) pin E epoch
+    bitsets, so every figure above is ×E: E·n²/8 dense, E·n²/8/S per stage.
     """
 
     action: str
@@ -341,33 +369,42 @@ class Admission:
 
 
 def admit_session(n_nodes: int, resources: Resources | None = None, *,
-                  bytes_in_use: int = 0) -> Admission:
+                  bytes_in_use: int = 0, window_epochs: int = 0) -> Admission:
     """Decide whether one more concurrent stream of ``n_nodes`` nodes fits.
 
     A stream session pins its adjacency-so-far bitset for its whole lifetime
-    — n²/8 bytes dense, n²/8/S per stage when ring-sharded — while edge
-    blocks are transient. So admission charges ``Resources.memory_bytes``
-    only for state: ``bytes_in_use`` (the sum of ``state_bytes`` over
-    currently active sessions) is subtracted and :func:`stream_sizing` picks
-    the smallest ring width whose shard fits the REMAINDER. If even the full
-    ring width does not fit, the verdict is ``"queue"`` — the serve loop
-    buffers the request host-side rather than letting S concurrent states
-    overcommit the device.
+    — n²/8 bytes dense, n²/8/S per stage when ring-sharded, and ×E for a
+    sliding window of ``window_epochs`` epoch bitsets (E·n²/8, E·n²/8/S) —
+    while edge blocks are transient. So admission charges
+    ``Resources.memory_bytes`` only for state: ``bytes_in_use`` (the sum of
+    ``state_bytes`` over currently active sessions) is subtracted and
+    :func:`stream_sizing` picks the smallest ring width whose shard fits the
+    REMAINDER. If even the full ring width does not fit, the verdict is
+    ``"queue"`` — the serve loop buffers the request host-side rather than
+    letting S concurrent states overcommit the device. The per-stage
+    discount is the planner's mesh model; the multiplexer re-takes the
+    decision at ring width 1 when no matching mesh hosts the stage axis
+    (host-emulated sharding pins all S shards on one device).
     """
     res = resources or Resources()
     remaining = max(res.memory_bytes - bytes_in_use, 0)
     stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
                        max_degree=0, max_fwd_degree=0, edges_in_memory=False)
     sub = dataclasses.replace(res, memory_bytes=remaining)
-    n_stages, _, shard_bytes = stream_sizing(stats, sub)
+    n_stages, _, shard_bytes = stream_sizing(stats, sub,
+                                             window_epochs=window_epochs)
+    window = f"windowed ({window_epochs} epochs) " if window_epochs else ""
     if shard_bytes > remaining:
         return Admission(
             action="queue", plan=None, state_bytes=shard_bytes,
-            reason=(f"state shard needs {shard_bytes} B but {remaining} B of "
-                    f"{res.memory_bytes} B remain (even at ring width "
-                    f"{n_stages}) — queue until an active session closes"))
+            reason=(f"{window}state shard needs {shard_bytes} B but "
+                    f"{remaining} B of {res.memory_bytes} B remain (even at "
+                    f"ring width {n_stages}) — queue until an active session "
+                    f"closes"))
     kind = "sharded" if n_stages > 1 else "dense"
     return Admission(
-        action=f"admit-{kind}", plan=plan(stats, sub), state_bytes=shard_bytes,
-        reason=(f"admit-{kind}: {shard_bytes} B/stage state fits the "
+        action=f"admit-{kind}",
+        plan=plan(stats, sub, window_epochs=window_epochs),
+        state_bytes=shard_bytes,
+        reason=(f"admit-{kind}: {window}{shard_bytes} B/stage state fits the "
                 f"{remaining} B remaining ({bytes_in_use} B already pinned)"))

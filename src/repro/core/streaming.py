@@ -30,6 +30,23 @@ shard's partial and the block total is psum-reduced; on a real mesh the step
 runs under shard_map via ``dynamic_pipeline.ShardedStateStream``
 (``make_mesh_ingest``), on a single host it is emulated with a vmap over the
 stage axis.
+
+SLIDING WINDOWS (``init_windowed_state``/``ingest_block_windowed``/
+``expire_epoch``) extend the same contract with deletions: the state is a
+ring of E epoch bitsets (E·n²/8 bytes; ``/S`` per stage when ring-sharded)
+whose OR is the LIVE adjacency — the edges of the most recent E epochs.
+``expire_epoch`` slides the window by rotating the ring head and clearing
+ONE epoch slot (no per-edge deletes). Exactness with cheap expiry comes from
+attribution: a live triangle dies exactly when its OLDEST edge's epoch
+leaves the window, so per-slot counters ``counts[r]`` hold the triangles
+whose oldest edge sits in slot r and the window total is ``counts.sum()``.
+The blocked two-phase ingest is reused per epoch — phase 1 sweeps the block
+against the E age-cumulative OR tables (newest-first prefix ORs of the ring)
+and adjacent differences attribute each closure to the age of its oldest
+wedge edge; phase 2's ``pre + mixed//2 + dd//3`` correction is unchanged,
+with the mixed term likewise differenced per age. See docs/STREAMING.md for
+the derivation and the window-semantics contract (re-arrivals of a
+still-live edge are duplicates; an edge re-inserted after expiry is new).
 """
 from __future__ import annotations
 
@@ -50,6 +67,11 @@ _EDGE_SMEM_BUDGET = 256 * 1024
 
 
 def init_state(n_nodes: int) -> dict:
+    """Unbounded stream state: the adjacency-so-far bitset.
+
+    State bytes: ``4·n·ceil(n/32) ≈ n²/8`` for ``adj`` plus one scalar
+    ``count`` — independent of the stream length. Allocation only; traces
+    nothing."""
     w = -(-n_nodes // 32)
     return {
         "adj": jnp.zeros((n_nodes, w), jnp.uint32),
@@ -59,13 +81,57 @@ def init_state(n_nodes: int) -> dict:
 
 def init_sharded_state(n_nodes: int, n_stages: int) -> dict:
     """Column-sharded state: stage s owns words [s·Ws, (s+1)·Ws) of every
-    row — n·Ws·4 ≈ n²/8/S bytes per stage. The trailing pad words (W rounded
-    up to S·Ws) map to no node and stay zero forever."""
+    row — n·Ws·4 ≈ n²/8/S bytes PER STAGE (S·n·Ws·4 total when the sharding
+    is host-emulated on one device). The trailing pad words (W rounded up to
+    S·Ws) map to no node and stay zero forever. Allocation only; traces
+    nothing."""
     w = -(-n_nodes // 32)
     ws = -(-w // n_stages)
     return {
         "adj": jnp.zeros((n_stages, n_nodes, ws), jnp.uint32),
         "count": jnp.zeros((), count_dtype()),
+    }
+
+
+def init_windowed_state(n_nodes: int, window_epochs: int) -> dict:
+    """Sliding-window state: a ring of E = ``window_epochs`` epoch bitsets.
+
+    ``epochs[r]`` holds the edges that arrived while ring slot r was the
+    current epoch; the LIVE adjacency is the OR over slots. ``counts[r]``
+    holds the live triangles whose OLDEST edge sits in slot r (so clearing a
+    slot deletes exactly the triangles that die with it — see
+    ``expire_epoch``); the window's triangle count is ``counts.sum()``
+    (``window_count``). ``head`` is the slot of the CURRENT epoch; slot age
+    is ``(head - r) mod E``.
+
+    State bytes: ``E·4·n·ceil(n/32) ≈ E·n²/8`` for the ring plus E count
+    slots — E× the unbounded state, still independent of the stream length.
+    Allocation only; traces nothing."""
+    if window_epochs < 1:
+        raise ValueError(f"window_epochs must be >= 1, got {window_epochs}")
+    w = -(-n_nodes // 32)
+    return {
+        "epochs": jnp.zeros((window_epochs, n_nodes, w), jnp.uint32),
+        "counts": jnp.zeros((window_epochs,), count_dtype()),
+        "head": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_windowed_sharded_state(n_nodes: int, window_epochs: int,
+                                n_stages: int) -> dict:
+    """Ring-sharded windowed state: ``init_windowed_state`` with every epoch
+    bitset column-sharded over S stages exactly like ``init_sharded_state``
+    — ``E·n·Ws·4 ≈ E·n²/8/S`` bytes per stage (all S shards on one device
+    when host-emulated). ``counts``/``head`` are replicated scalars.
+    Allocation only; traces nothing."""
+    if window_epochs < 1:
+        raise ValueError(f"window_epochs must be >= 1, got {window_epochs}")
+    w = -(-n_nodes // 32)
+    ws = -(-w // n_stages)
+    return {
+        "epochs": jnp.zeros((n_stages, window_epochs, n_nodes, ws), jnp.uint32),
+        "counts": jnp.zeros((window_epochs,), count_dtype()),
+        "head": jnp.zeros((), jnp.int32),
     }
 
 
@@ -76,6 +142,11 @@ _INGEST_TRACES = [0]
 
 
 def ingest_trace_count() -> int:
+    """Process-wide ingest-compile telemetry: how many times any ingest body
+    (blocked, sharded, windowed, per-edge, mesh) has been TRACED — compiles,
+    not calls. The contract every test pins: one fixed block shape → one
+    trace per ingest family, shared across streams, sessions and (for the
+    windowed path) epochs."""
     return _INGEST_TRACES[0]
 
 
@@ -111,17 +182,11 @@ def _stage_seen(adj_s: jax.Array, lo: jax.Array, hi: jax.Array, off) -> jax.Arra
     return jnp.where(owned, bit, jnp.uint32(0))
 
 
-def _stage_update(adj_s: jax.Array, lo: jax.Array, hi: jax.Array,
-                  live: jax.Array, off, *, use_kernel: bool = False,
-                  interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """One stage's share of the two-phase block ingest.
-
-    Returns (new word shard, (pre, mixed, dd) partials). The caller combines
-    shards (psum / sum over the stage axis) BEFORE dividing: mixed counts
-    every (block, block, pre-block) triangle twice and dd every all-in-block
-    triangle three times, and those multiplicities only hold for the
-    full-width sums."""
-    n, ws = adj_s.shape
+def _delta_scatter(n: int, ws: int, lo: jax.Array, hi: jax.Array,
+                   live: jax.Array, off) -> jax.Array:
+    """The block's delta-adjacency on this stage's word shard: every live
+    edge's two bits, landed in ONE scatter (dead edges scatter out of bounds
+    and are dropped)."""
 
     def owned_scatter(dst, row, col_node):
         wl = col_node // 32 - off
@@ -134,8 +199,36 @@ def _stage_update(adj_s: jax.Array, lo: jax.Array, hi: jax.Array,
         # updates to one word carry distinct bits and add == bitwise-or
         return dst.at[r, c].add(bit)
 
-    delta = owned_scatter(jnp.zeros_like(adj_s), lo, hi)
-    delta = owned_scatter(delta, hi, lo)
+    delta = owned_scatter(jnp.zeros((n, ws), jnp.uint32), lo, hi)
+    return owned_scatter(delta, hi, lo)
+
+
+def _kernel_fits(use_kernel: bool, table_bytes: int, n_edges: int) -> bool:
+    """THE gate for routing a closure sweep through ``kernels/bitset_count``:
+    the mask table(s) must fit the VMEM budget and the edge list SMEM — one
+    definition so the unbounded and windowed paths cannot drift."""
+    return (use_kernel and table_bytes <= _MASK_VMEM_BUDGET
+            and n_edges * 8 <= _EDGE_SMEM_BUDGET)
+
+
+def _phantom_edges(lo: jax.Array, hi: jax.Array, live: jax.Array, n: int) -> jax.Array:
+    """Dead edges become phantoms (id = n) so the kernel's validity mask
+    doubles as the live mask."""
+    return jnp.where(live[:, None], jnp.stack([lo, hi], axis=1), n)
+
+
+def _stage_update(adj_s: jax.Array, lo: jax.Array, hi: jax.Array,
+                  live: jax.Array, off, *, use_kernel: bool = False,
+                  interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """One stage's share of the two-phase block ingest.
+
+    Returns (new word shard, (pre, mixed, dd) partials). The caller combines
+    shards (psum / sum over the stage axis) BEFORE dividing: mixed counts
+    every (block, block, pre-block) triangle twice and dd every all-in-block
+    triangle three times, and those multiplicities only hold for the
+    full-width sums."""
+    n, ws = adj_s.shape
+    delta = _delta_scatter(n, ws, lo, hi, live, off)
 
     glo = jnp.clip(lo, 0, n - 1)
     ghi = jnp.clip(hi, 0, n - 1)
@@ -147,15 +240,10 @@ def _stage_update(adj_s: jax.Array, lo: jax.Array, hi: jax.Array,
         return jnp.sum(jnp.where(live, pc, 0), dtype=count_dtype())
 
     table_bytes = n * ws * 4
-    edge_bytes = lo.shape[0] * 8
-    kernel_ok = (use_kernel and table_bytes <= _MASK_VMEM_BUDGET
-                 and edge_bytes <= _EDGE_SMEM_BUDGET)
-    if kernel_ok:
+    if _kernel_fits(use_kernel, table_bytes, lo.shape[0]):
         from repro.kernels.bitset_count.ops import bitset_edge_count, bitset_pair_count
 
-        # dead edges become phantoms (id = n) so the kernel's validity mask
-        # doubles as the live mask
-        ek = jnp.where(live[:, None], jnp.stack([lo, hi], axis=1), n)
+        ek = _phantom_edges(lo, hi, live, n)
         pre = bitset_edge_count(adj_s, ek, interpret=interpret).astype(count_dtype())
         if 2 * table_bytes <= _MASK_VMEM_BUDGET:  # pair kernel holds two tables
             mixed = (bitset_pair_count(adj_s, delta, ek, interpret=interpret)
@@ -178,12 +266,125 @@ def _combine(count, terms):
     return count + terms[0] + terms[1] // 2 + terms[2] // 3
 
 
+# --------------------------------------------------------------------------
+# Sliding-window math (shared by the dense / emulated / mesh windowed paths)
+# --------------------------------------------------------------------------
+def _age_order(head, n_epochs: int) -> jax.Array:
+    """Ring slots in AGE order, newest first: ``order[t]`` is the slot whose
+    epoch is t epochs old (order[0] = head = the current epoch)."""
+    return (head - jnp.arange(n_epochs, dtype=jnp.int32)) % n_epochs
+
+
+def _age_cum(epochs_s: jax.Array, head) -> jax.Array:
+    """Age-cumulative OR tables on this stage's word shard: ``cum[t]`` is
+    the OR of the t+1 NEWEST epoch bitsets, so ``cum[-1]`` is the live
+    adjacency. Computed once per block and shared between the dedup check
+    and the phase sweeps."""
+    n_epochs = epochs_s.shape[0]
+    return jax.lax.associative_scan(
+        jnp.bitwise_or, epochs_s[_age_order(head, n_epochs)], axis=0)
+
+
+def _windowed_stage_update(epochs_s: jax.Array, cum: jax.Array,
+                           lo: jax.Array, hi: jax.Array,
+                           live: jax.Array, off, head, *,
+                           use_kernel: bool = False, interpret: bool = True
+                           ) -> tuple[jax.Array, jax.Array]:
+    """One stage's share of the windowed two-phase block ingest.
+
+    The unbounded ingest's phase-1 sweep is reused PER EPOCH: ``cum`` is
+    this shard's ``_age_cum`` table stack (the caller already built it for
+    the dedup check), and each table gets the same gather+popcount closure
+    sweep — ``P[t] = Σ_e pc(cum_t[u] & cum_t[v])`` counts the wedges both
+    of whose edges are at age ≤ t, once each. Phase 2's mixed term is swept
+    against the same tables
+    (``M[t] = Σ_e pc(cum_t[u] & D[v]) + pc(D[u] & cum_t[v])``, each
+    (block, block, age ≤ t) triangle twice) and ``dd`` is unchanged.
+
+    Returns ``(new word shard, terms)`` with ``terms`` the (2E+1,) stack
+    ``[P (E,), M (E,), dd]``. The caller psums/sums shards over the stage
+    axis BEFORE differencing adjacent ages and dividing
+    (``_windowed_combine``) — multiplicities only hold for full-width sums,
+    exactly like the unbounded path."""
+    n_epochs, n, ws = epochs_s.shape
+    delta = _delta_scatter(n, ws, lo, hi, live, off)
+
+    glo = jnp.clip(lo, 0, n - 1)
+    ghi = jnp.clip(hi, 0, n - 1)
+    du, dv = delta[glo], delta[ghi]             # (B, ws)
+
+    def masked_sum(words):
+        # words: (..., B, ws) -> (...,) masked popcount over live edges
+        pc = jax.lax.population_count(words).sum(axis=-1)
+        return jnp.sum(jnp.where(live, pc, 0), axis=-1, dtype=count_dtype())
+
+    table_bytes = n * ws * 4
+    if _kernel_fits(use_kernel, table_bytes, lo.shape[0]):
+        from repro.kernels.bitset_count.ops import bitset_edge_count, bitset_pair_count
+
+        ek = _phantom_edges(lo, hi, live, n)
+        pair_ok = 2 * table_bytes <= _MASK_VMEM_BUDGET
+        ps, ms = [], []
+        for t in range(n_epochs):  # the unbounded kernels, once per epoch age
+            ps.append(bitset_edge_count(cum[t], ek,
+                                        interpret=interpret).astype(count_dtype()))
+            if pair_ok:
+                ms.append((bitset_pair_count(cum[t], delta, ek, interpret=interpret)
+                           + bitset_pair_count(delta, cum[t], ek, interpret=interpret)
+                           ).astype(count_dtype()))
+            else:
+                cu, cv = cum[t][glo], cum[t][ghi]
+                ms.append(masked_sum(cu & dv) + masked_sum(du & cv))
+        p_terms = jnp.stack(ps)
+        m_terms = jnp.stack(ms)
+        dd = bitset_edge_count(delta, ek, interpret=interpret).astype(count_dtype())
+    else:
+        cu, cv = cum[:, glo], cum[:, ghi]       # (E, B, ws)
+        p_terms = masked_sum(cu & cv)           # (E,)
+        m_terms = masked_sum(cu & dv[None]) + masked_sum(du[None] & cv)
+        dd = masked_sum(du & dv)
+    new = epochs_s.at[head].set(epochs_s[head] | delta)
+    return new, jnp.concatenate([p_terms, m_terms, dd[None]])
+
+
+def _windowed_combine(counts: jax.Array, terms: jax.Array, head) -> jax.Array:
+    """Attribute the block's full-width (P, M, dd) sums to per-slot counts.
+
+    ``P[t] - P[t-1]`` is the number of closures whose OLDEST wedge edge is
+    exactly t epochs old (once each); ``(M[t] - M[t-1]) // 2`` the mixed
+    triangles whose third edge is exactly t old (M counts them twice);
+    ``dd // 3`` the all-in-block triangles (all three edges current). Each
+    lands on the slot that is t epochs old, so ``expire_epoch``'s slot clear
+    deletes exactly the triangles whose oldest edge leaves the window. The
+    integer divisions are exact for full-width sums only — callers must
+    psum/sum shards before calling this."""
+    n_epochs = counts.shape[0]
+    p_terms, m_terms, dd = terms[:n_epochs], terms[n_epochs:2 * n_epochs], terms[-1]
+    pre_t = jnp.diff(p_terms, prepend=jnp.zeros((1,), p_terms.dtype))
+    mixed_t = jnp.diff(m_terms, prepend=jnp.zeros((1,), m_terms.dtype)) // 2
+    contrib = (pre_t + mixed_t).at[0].add(dd // 3)
+    return counts.at[_age_order(head, n_epochs)].add(contrib)
+
+
+def window_count(state: dict):
+    """The live window's triangle count (device scalar, ``count_dtype``):
+    the sum over per-slot attribution counters. Traces nothing (plain
+    reduction)."""
+    return state["counts"].sum(dtype=state["counts"].dtype)
+
+
 @partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def ingest_block(state: dict, edges: jax.Array, *, use_kernel: bool = False,
                  interpret: bool = True) -> dict:
     """Fold one (B, 2) int32 edge block (phantom rows: id >= n_nodes) with the
     two-phase blocked ingest. Duplicate edges are ignored (the paper's
-    simple-graph precondition); self-loops contribute nothing."""
+    simple-graph precondition); self-loops contribute nothing.
+
+    State bytes: the n²/8 ``adj`` bitset, updated in place-shape (transient
+    block working set ~8 gathered word-rows per edge). Trace contract: one
+    trace per (block shape, n, backend flags) — module-level jit, so every
+    stream and session sharing a block shape shares ONE trace
+    (``ingest_trace_count`` telemetry)."""
     _INGEST_TRACES[0] += 1
     adj = state["adj"]
     n = adj.shape[0]
@@ -200,7 +401,11 @@ def ingest_block_sharded(state: dict, edges: jax.Array) -> dict:
     stands in for the device ring, sum over stages for the psum. Exercises
     the exact word-shard decomposition the mesh path runs under shard_map
     (``make_mesh_ingest``); the Pallas kernel stays off here because the
-    emulation vmaps the stage axis."""
+    emulation vmaps the stage axis.
+
+    State bytes: all S column shards live on THIS device — n²/8 total (the
+    n²/8/S-per-stage saving needs the real mesh path). Trace contract: one
+    trace per (block shape, S, n), shared across streams and epochs."""
     _INGEST_TRACES[0] += 1
     adj = state["adj"]  # (S, n, Ws)
     s, n, ws = adj.shape
@@ -221,7 +426,9 @@ def make_mesh_ingest(mesh, axis_name: str | None = None, *,
     (pre, mixed, dd) partials are psum-reduced per block. Memoized (and the
     runtime shared per mesh) so every block of every stream — including
     interleaved serving sessions — on one mesh reuses one compiled
-    executable."""
+    executable: one trace per (block shape, mesh, backend flags). State
+    bytes: n²/8/S per device — the real per-stage discount the admission
+    accounting may charge."""
     from repro.core.dynamic_pipeline import ShardedStateStream
 
     runtime = ShardedStateStream.shared(mesh, axis_name or mesh.axis_names[0])
@@ -248,6 +455,193 @@ def make_mesh_ingest(mesh, axis_name: str | None = None, *,
 
 
 # --------------------------------------------------------------------------
+# Sliding-window ingest: the epoch ring (dense / emulated-sharded / mesh)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def ingest_block_windowed(state: dict, edges: jax.Array, *,
+                          use_kernel: bool = False,
+                          interpret: bool = True) -> dict:
+    """Fold one (B, 2) int32 edge block into the CURRENT epoch of a windowed
+    state (``init_windowed_state``; phantom rows: id >= n_nodes).
+
+    Duplicates of a STILL-LIVE edge are ignored wherever that edge's epoch
+    sits (the window keeps each live edge's first arrival — the unbounded
+    path's simple-graph precondition applied per window); an edge whose
+    earlier arrival has expired is genuinely new and lands in the current
+    epoch. Per-slot triangle attribution is exact (see
+    ``_windowed_combine``), so ``window_count`` equals a from-scratch
+    recount of the live window after every block.
+
+    State bytes: unchanged E·n²/8 (the ring is updated in place-shape); the
+    sweep builds E age-cumulative tables, so transient memory is ~2× the
+    ring. Trace contract: one trace per (block shape, E, n) — ``head`` is a
+    traced scalar, so epoch advances NEVER retrace (pinned by
+    ``tests/test_windowed_stream.py``)."""
+    _INGEST_TRACES[0] += 1
+    epochs = state["epochs"]
+    n = epochs.shape[1]
+    keep, lo, hi = _canonical_live(edges, n)
+    cum = _age_cum(epochs, state["head"])  # cum[-1] = live adjacency
+    live = keep & (_stage_seen(cum[-1], lo, hi, 0) == 0)
+    epochs, terms = _windowed_stage_update(
+        epochs, cum, lo, hi, live, 0, state["head"],
+        use_kernel=use_kernel, interpret=interpret)
+    return {"epochs": epochs,
+            "counts": _windowed_combine(state["counts"], terms, state["head"]),
+            "head": state["head"]}
+
+
+@jax.jit
+def ingest_block_windowed_sharded(state: dict, edges: jax.Array) -> dict:
+    """Ring-sharded windowed ingest, single-host emulation: vmap over the
+    stage axis stands in for the device ring (all S shards on this device —
+    E·n²/8 bytes total, not per stage), sum over stages for the psum. The
+    (P, M, dd) partials are summed over shards BEFORE ``_windowed_combine``
+    differences and divides — the multiplicities only hold full-width.
+    Trace contract: one trace per (block shape, E, S, n), shared across
+    epochs and sessions."""
+    _INGEST_TRACES[0] += 1
+    epochs = state["epochs"]  # (S, E, n, Ws)
+    s, _, n, ws = epochs.shape
+    head = state["head"]
+    keep, lo, hi = _canonical_live(edges, n)
+    offs = jnp.arange(s, dtype=jnp.int32) * ws
+    cums = jax.vmap(lambda e: _age_cum(e, head))(epochs)  # (S, E, n, Ws)
+    seen = jax.vmap(lambda c, o: _stage_seen(c[-1], lo, hi, o))(
+        cums, offs).sum(0)
+    live = keep & (seen == 0)
+    epochs, terms = jax.vmap(
+        lambda e, c, o: _windowed_stage_update(e, c, lo, hi, live, o, head))(
+        epochs, cums, offs)
+    return {"epochs": epochs,
+            "counts": _windowed_combine(state["counts"], terms.sum(0), head),
+            "head": head}
+
+
+@lru_cache(maxsize=32)
+def make_mesh_ingest_windowed(mesh, axis_name: str | None = None, *,
+                              use_kernel: bool = False, interpret: bool = True):
+    """Jitted ring-sharded WINDOWED ingest step over a real device mesh: the
+    epoch ring's stage axis is laid out along ``axis_name`` (E·n²/8/S bytes
+    per device) via the same ``dynamic_pipeline.ShardedStateStream`` runtime
+    the unbounded mesh ingest uses — sharded and dense windows share one
+    code path (``_windowed_stage_update``). ``counts``/``head`` ride the
+    replicated carry; ``seen`` and the (P, M, dd) partials are psum-reduced
+    per block before ``_windowed_combine``. Memoized per
+    (mesh, axis, backend flags): every windowed stream on one mesh reuses
+    one compiled executable per block shape."""
+    from repro.core.dynamic_pipeline import ShardedStateStream
+
+    runtime = ShardedStateStream.shared(mesh, axis_name or mesh.axis_names[0])
+    ax = runtime.axis_name
+
+    def step(epochs_s, carry, edges):
+        _INGEST_TRACES[0] += 1
+        counts, head = carry
+        _, n, ws = epochs_s.shape
+        off = jax.lax.axis_index(ax) * ws
+        keep, lo, hi = _canonical_live(edges, n)
+        cum = _age_cum(epochs_s, head)  # cum[-1] = this shard's live words
+        seen = jax.lax.psum(_stage_seen(cum[-1], lo, hi, off), ax)
+        live = keep & (seen == 0)
+        epochs_s, terms = _windowed_stage_update(
+            epochs_s, cum, lo, hi, live, off, head,
+            use_kernel=use_kernel, interpret=interpret)
+        counts = _windowed_combine(counts, jax.lax.psum(terms, ax), head)
+        return epochs_s, (counts, head)
+
+    fn = runtime.jit_step(step)
+
+    def ingest(state: dict, edges: jax.Array) -> dict:
+        epochs, (counts, head) = fn(
+            state["epochs"], (state["counts"], state["head"]), edges)
+        return {"epochs": epochs, "counts": counts, "head": head}
+
+    return ingest
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _expire(epochs, counts, head):
+    # the ring and counters are donated: the slide aliases the input buffers
+    # (one slot actually written) instead of copying the whole E-slot ring
+    n_epochs = counts.shape[0]
+    new_head = (head + 1) % n_epochs
+    if epochs.ndim == 4:  # sharded: (S, E, n, Ws)
+        epochs = epochs.at[:, new_head].set(jnp.uint32(0))
+    else:  # dense: (E, n, W)
+        epochs = epochs.at[new_head].set(jnp.uint32(0))
+    return epochs, counts.at[new_head].set(0), new_head
+
+
+def expire_epoch(state: dict) -> dict:
+    """Slide the window by one epoch: rotate the ring head onto the OLDEST
+    slot and clear it (bitset + count slot).
+
+    This is the whole deletion story — a single epoch-slot clear, no
+    per-edge deletes: the cleared slot held exactly the edges older than the
+    new window, and ``counts`` attribution (oldest-edge epoch) guarantees
+    its count slot held exactly the triangles those edges supported. The new
+    current epoch starts empty. The ring and counters are DONATED to the
+    jit — the caller must rebind (``state = expire_epoch(state)``) and drop
+    the old dict — so a slide writes O(n²/8) bytes (one slot) regardless of
+    how many edges die, instead of copying the E-slot ring. Works on dense
+    and sharded windowed states; one trace per state shape (``head`` is
+    traced, so repeated slides never retrace)."""
+    epochs, counts, head = _expire(state["epochs"], state["counts"], state["head"])
+    return {"epochs": epochs, "counts": counts, "head": head}
+
+
+def count_windowed_stream(n_nodes: int, epochs, window_epochs: int, *,
+                          block_size: int | None = None, n_stages: int = 1,
+                          mesh=None, use_kernel: bool = False,
+                          interpret: bool = True) -> int:
+    """Consume an iterable of EPOCHS — each an iterable of (B, 2) numpy edge
+    blocks — and return the triangle count of the final window (the last
+    ``window_epochs`` epochs), host-synced. The core-level twin of
+    ``TriangleCounter.count_windowed`` for differential tests and benches.
+
+    Blocks are coalesced/padded to one fixed shape through a single
+    :class:`BlockBuffer` shared across epochs (epoch tails flush at every
+    boundary; the tail shape is sticky), so a stream of same-sized epochs
+    costs one ingest trace TOTAL — ``expire_epoch`` between epochs rotates
+    a traced head and never retraces. ``n_stages > 1`` ring-shards every
+    epoch bitset (E·n²/8/S bytes per stage on ``mesh`` when its size
+    matches, else host-emulated)."""
+    if n_stages > 1:
+        state = init_windowed_sharded_state(n_nodes, window_epochs, n_stages)
+        if mesh is not None and mesh.devices.size == n_stages:
+            step = make_mesh_ingest_windowed(mesh, use_kernel=use_kernel,
+                                             interpret=interpret)
+        else:
+            step = ingest_block_windowed_sharded
+    else:
+        state = init_windowed_state(n_nodes, window_epochs)
+        step = partial(ingest_block_windowed, use_kernel=use_kernel,
+                       interpret=interpret)
+    buf = BlockBuffer(n_nodes, block_size)
+
+    def _drain(blocks):
+        nonlocal state
+        for b in blocks:
+            state = step(state, b)
+
+    first = True
+    for epoch_blocks in epochs:
+        if not first:  # close the previous epoch: flush its tail, slide
+            tail = buf.flush()
+            if tail is not None:
+                _drain([tail])
+            state = expire_epoch(state)
+        first = False
+        for block in epoch_blocks:
+            _drain(buf.push(block))
+    tail = buf.flush()
+    if tail is not None:
+        _drain([tail])
+    return int(window_count(state))
+
+
+# --------------------------------------------------------------------------
 # Per-edge scan — the seed implementation, retained as the oracle
 # --------------------------------------------------------------------------
 @jax.jit
@@ -256,7 +650,8 @@ def ingest_block_per_edge(state: dict, edges: jax.Array) -> dict:
     Retained as the differential-testing ORACLE for ``ingest_block`` /
     ``ingest_block_sharded`` and as the ``stream_bench`` baseline — it is
     trivially correct (each edge sees exactly the adjacency before it) but
-    neither parallel nor pipelined."""
+    neither parallel nor pipelined. Same n²/8 state bytes and one-trace-per-
+    block-shape contract as ``ingest_block``."""
     _INGEST_TRACES[0] += 1
     n = state["adj"].shape[0]
 
@@ -295,6 +690,11 @@ class BlockBuffer:
     (still a single shape for the stream — a 100-edge stream under a
     planner-sized 1M block must not scan 1M phantom rows).
     ``block_size=None`` adopts the first non-empty push's row count.
+
+    Host-side cost: at most ``block_size - 1`` buffered edges (numpy); the
+    device state is whoever consumes the emitted blocks. Emitting one fixed
+    shape is what holds the one-ingest-trace-per-stream contract — every
+    shape this buffer emits is one (shared, module-level) ingest trace.
     """
 
     def __init__(self, n_nodes: int, block_size: int | None = None):
@@ -303,6 +703,7 @@ class BlockBuffer:
         self._buf: list[np.ndarray] = []
         self._buffered = 0
         self._emitted_full = False
+        self._tail_target = 0  # sticky pow2 tail shape across repeated flushes
 
     def push(self, block) -> list[jax.Array]:
         """Buffer ``block``; return every full ``block_size`` block it
@@ -324,8 +725,12 @@ class BlockBuffer:
         return out
 
     def flush(self) -> jax.Array | None:
-        """The padded tail block (None if nothing is buffered). Call once, at
-        end of stream."""
+        """The padded tail block (None if nothing is buffered). Call at end
+        of stream — or at every epoch boundary for a windowed session: the
+        power-of-two tail shape is STICKY (remembered and only ever grown),
+        so repeated flushes of similar-size tails reuse one shape, hence one
+        ingest trace (distinct shapes only when a tail outgrows every
+        earlier one — log2-bounded)."""
         if not self._buffered:
             return None
         flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
@@ -333,10 +738,11 @@ class BlockBuffer:
         if self._emitted_full:
             target = self.block_size
         else:  # never filled a block: one power-of-two shape, not block_size
-            target = 8
+            target = max(self._tail_target, 8)
             while target < min(len(flat), self.block_size):
                 target *= 2
             target = min(target, self.block_size)
+            self._tail_target = target
         pad = np.full((target - len(flat), 2), self.n_nodes, np.int32)
         return jnp.asarray(np.concatenate([flat, pad]))
 
@@ -389,7 +795,9 @@ def count_stream(n_nodes: int, blocks, *, block_size: int | None = None,
 def count_stream_per_edge(n_nodes: int, blocks, *,
                           block_size: int | None = None) -> int:
     """The seed streaming fold (per-edge scan) — the oracle twin of
-    ``count_stream`` for differential tests and ``stream_bench``."""
+    ``count_stream`` for differential tests and ``stream_bench``. Same
+    n²/8 state bytes and one-trace-per-fixed-shape-stream contract; the
+    cost difference is the O(B) sequential scan per block."""
     state = init_state(n_nodes)
     for block in padded_blocks(blocks, n_nodes, block_size):
         state = ingest_block_per_edge(state, block)

@@ -139,15 +139,26 @@ class TriangleServer:
         return results
 
     # -- streaming sessions ------------------------------------------------
-    def open_stream(self, n_nodes: int, *, block_size: int | None = None) -> int:
+    def open_stream(self, n_nodes: int, *, block_size: int | None = None,
+                    window: int | None = None) -> int:
         """Open one streaming session on the server's multiplexer; returns
         its session id (admitted, or queued if the planner's budget says the
-        state would overcommit memory — see ``serve.sessions``)."""
-        return self.streams.open(n_nodes, block_size=block_size)
+        state would overcommit memory — see ``serve.sessions``).
+        ``window=E`` opens a sliding-window session (admission charges its
+        E·n²/8(/S) epoch-ring state); windowed and unbounded sessions
+        multiplex over the same compile cache."""
+        return self.streams.open(n_nodes, block_size=block_size, window=window)
 
     def feed(self, sid: int, edges) -> None:
-        """Feed one (B, 2) edge block to an open session."""
+        """Feed one (B, 2) edge block to an open session (the current epoch
+        for windowed sessions)."""
         self.streams.feed(sid, edges)
+
+    def advance_stream(self, sid: int) -> None:
+        """Slide a windowed session's window one epoch (see
+        ``StreamMultiplexer.advance``: a single epoch-slot clear, buffered
+        as an epoch marker while the session is queued)."""
+        self.streams.advance(sid)
 
     def close_stream(self, sid: int):
         """Finalize a session; returns its ``CountResult`` (idempotent)."""

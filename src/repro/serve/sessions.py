@@ -9,17 +9,26 @@ feeding one block shape cost exactly one trace.
 
 The memory story is the planner's (``api.planner.admit_session``): each
 active session pins its adjacency-so-far bitset — n²/8 bytes dense, n²/8/S
-per stage when the admission plan is ring-sharded — and the multiplexer
-accounts those pinned bytes against ``Resources.memory_bytes`` (the
-per-stage discount only applies when the counter's mesh actually hosts the
-stage axis — host-emulated sharding pays the full bitset). A request that
-does not fit RIGHT NOW is QUEUED, not opened: its feeds buffer host-side
-(numpy, proportional to the edges fed while waiting) and it is admitted
+per stage when the admission plan is ring-sharded, ×E for a sliding-window
+session of E epoch bitsets — and the multiplexer accounts those pinned
+bytes against ``Resources.memory_bytes`` (the per-stage discount only
+applies when the counter's mesh actually hosts the stage axis —
+host-emulated sharding pays the full bitset). A request that does not fit
+RIGHT NOW is QUEUED, not opened: its feeds buffer host-side (numpy,
+proportional to the edges fed while waiting; window advances buffer as
+epoch markers so replay preserves epoch boundaries) and it is admitted
 FIFO — never around an earlier queued request — as active sessions close,
 with the buffered blocks replayed on admission. A request that could never
 fit even on an idle server is rejected at ``open`` instead of queueing
 forever. Queueing trades host buffer for device state; it never
 overcommits the device.
+
+WINDOWED and UNBOUNDED sessions multiplex over the SAME compile cache:
+``open(n, window=E)`` admits a sliding-window session (the windowed ingest
+is its own module-level jit, so windowed sessions share one trace per block
+shape with each other, across all their epochs, while unbounded sessions
+share theirs), and ``advance(sid)`` slides one session's window without
+touching its neighbours.
 
 Single-driver concurrency: sessions are interleavable from one thread (the
 serve loop), not thread-safe.
@@ -31,28 +40,38 @@ from collections import OrderedDict
 
 import numpy as np
 
+# Epoch marker in a queued session's host-side buffer: replayed as advance()
+# so a windowed request admitted late still sees its epoch boundaries.
+_ADVANCE = "advance"
+
 
 @dataclasses.dataclass
 class _QueuedStream:
     n_nodes: int
     block_size: int | None
-    blocks: list  # host-side numpy buffers, replayed on admission
+    window: int | None
+    blocks: list  # host-side numpy buffers + _ADVANCE markers, replayed in order
 
 
 class StreamMultiplexer:
     """Interleave block ingest across concurrent stream sessions.
 
     Lifecycle per request: ``open(n_nodes) -> sid`` (admitted or queued per
-    the planner's budget), any number of ``feed(sid, edges)`` in any
-    interleaving with other sessions, then ``close(sid) -> CountResult``
-    (idempotent; closing frees the session's pinned state and admits queued
-    requests FIFO). ``status(sid)`` is ``"active"``/``"queued"``/``"closed"``.
+    the planner's budget; ``window=E`` opens a sliding-window session), any
+    number of ``feed(sid, edges)`` — and, for windowed sessions,
+    ``advance(sid)`` — in any interleaving with other sessions, then
+    ``close(sid) -> CountResult`` (idempotent; closing frees the session's
+    pinned state and admits queued requests FIFO). ``status(sid)`` is
+    ``"active"``/``"queued"``/``"closed"``.
 
     All sessions run over one :class:`~repro.api.TriangleCounter` (one
     compile cache). ``block_size`` is the uniform default applied to every
     session (overridable per ``open``): uniform block shapes are what make S
-    concurrent sessions share a single ingest trace.
-    """
+    concurrent sessions share a single ingest trace per ingest family
+    (unbounded and windowed sessions are distinct jits, one trace each).
+    ``bytes_in_use`` is the sum of the active sessions' pinned state —
+    n²/8(/S) each, ×E for windowed — the only thing admission charges
+    (edge blocks are transient)."""
 
     def __init__(self, counter=None, resources=None, *,
                  block_size: int | None = None):
@@ -69,37 +88,61 @@ class StreamMultiplexer:
         self._next_sid = 0
 
     # -- lifecycle ---------------------------------------------------------
-    def open(self, n_nodes: int, *, block_size: int | None = None) -> int:
+    def open(self, n_nodes: int, *, block_size: int | None = None,
+             window: int | None = None) -> int:
         """Admit (or queue) one more stream; returns its session id.
 
-        A stream whose state can NEVER fit — queue verdict even against an
-        idle server — is rejected here with ``ValueError`` instead of being
+        ``window=E`` opens a sliding-window session: admission charges its
+        E·n²/8(/S) epoch-ring state instead of the unbounded n²/8(/S), so a
+        window that fits dense may only admit sharded, or queue. A stream
+        whose state can NEVER fit — queue verdict even against an idle
+        server — is rejected here with ``ValueError`` instead of being
         queued forever (its feeds would buffer unboundedly waiting for
         budget that will never free)."""
         sid = self._next_sid
         self._next_sid += 1
         bs = block_size if block_size is not None else self.block_size
         if not self._queued:  # FIFO: never admit around an earlier queued one
-            adm = self._admission(n_nodes, self.bytes_in_use)
+            adm = self._admission(n_nodes, self.bytes_in_use, window)
             if adm.admitted:
                 self._admit(sid, n_nodes, bs, adm)
                 return sid
-        idle = self._admission(n_nodes, 0)
+        idle = self._admission(n_nodes, 0, window)
         if not idle.admitted:
             raise ValueError(
                 f"stream of {n_nodes} nodes can never be admitted on this "
                 f"server: {idle.reason}")
-        self._queued[sid] = _QueuedStream(n_nodes, bs, [])
+        self._queued[sid] = _QueuedStream(n_nodes, bs, window, [])
         return sid
 
     def feed(self, sid: int, edges) -> None:
         """Feed one (B, 2) edge array to session ``sid``: ingested through
-        the shared cache if active, buffered host-side if queued."""
+        the shared cache if active (one trace per block shape across ALL
+        sessions of the same ingest family), buffered host-side if queued
+        (numpy, proportional to the edges fed while waiting)."""
         if sid in self._active:
             self._active[sid].feed(edges)
         elif sid in self._queued:
             self._queued[sid].blocks.append(
                 np.asarray(edges, dtype=np.int32).reshape(-1, 2))
+        elif sid in self._results:
+            raise RuntimeError(f"session {sid} already closed")
+        else:
+            raise KeyError(f"unknown session {sid}")
+
+    def advance(self, sid: int) -> None:
+        """Slide session ``sid``'s window one epoch (windowed sessions only:
+        flush the closing epoch's tail, then one epoch-slot clear — no
+        per-edge deletes, no new state, no retrace). A QUEUED windowed
+        session records the boundary as a marker so its replay on admission
+        reproduces the exact epoch structure."""
+        if sid in self._active:
+            self._active[sid].advance()
+        elif sid in self._queued:
+            if not self._queued[sid].window:
+                raise RuntimeError(
+                    "advance() is for windowed sessions — open with window=E")
+            self._queued[sid].blocks.append(_ADVANCE)
         elif sid in self._results:
             raise RuntimeError(f"session {sid} already closed")
         else:
@@ -132,6 +175,9 @@ class StreamMultiplexer:
         return result
 
     def status(self, sid: int) -> str:
+        """``"active"`` (state pinned on device, feeds ingest),
+        ``"queued"`` (host-side buffer only, no device state), or
+        ``"closed"`` (result cached, state freed)."""
         if sid in self._active:
             return "active"
         if sid in self._queued:
@@ -149,23 +195,28 @@ class StreamMultiplexer:
         return len(self._queued)
 
     # -- internals ---------------------------------------------------------
-    def _admission(self, n_nodes: int, bytes_in_use: int):
+    def _admission(self, n_nodes: int, bytes_in_use: int,
+                   window: int | None = None):
         """Mesh-aware admission: the planner's n²/8/S-per-stage accounting
-        only holds when the counter's mesh actually hosts the stage axis.
-        Host-EMULATED sharding materializes all S shards on the one real
-        device, so without a matching mesh the decision is re-taken at ring
-        width 1 — the full bitset must fit, or the request queues."""
+        (×E for windowed sessions) only holds when the counter's mesh
+        actually hosts the stage axis. Host-EMULATED sharding materializes
+        all S shards on the one real device, so without a matching mesh the
+        decision is re-taken at ring width 1 — the full (epoch-ring) bitset
+        must fit, or the request queues."""
         from repro.api.planner import admit_session
 
-        adm = admit_session(n_nodes, self.resources, bytes_in_use=bytes_in_use)
+        adm = admit_session(n_nodes, self.resources, bytes_in_use=bytes_in_use,
+                            window_epochs=window or 0)
         if (adm.admitted and adm.plan.n_stages > 1
                 and not self.counter._mesh_matches(adm.plan.n_stages)):
             adm = admit_session(
                 n_nodes, dataclasses.replace(self.resources, max_stages=1),
-                bytes_in_use=bytes_in_use)
+                bytes_in_use=bytes_in_use, window_epochs=window or 0)
         return adm
 
     def _admit(self, sid: int, n_nodes: int, block_size: int | None, adm) -> None:
+        # adm.plan carries window_epochs, so a windowed admission opens a
+        # windowed session without re-stating the window here
         self._active[sid] = self.counter.open_stream(
             n_nodes, plan=adm.plan, block_size=block_size)
         self._state_bytes[sid] = adm.state_bytes
@@ -173,13 +224,18 @@ class StreamMultiplexer:
 
     def _admit_pending(self) -> None:
         """Admit queued requests FIFO while the freed budget allows,
-        replaying each one's host-buffered blocks."""
+        replaying each one's host-buffered blocks (and, for windowed
+        sessions, its buffered epoch markers as ``advance()`` calls — the
+        replayed session is bit-identical to one admitted immediately)."""
         while self._queued:
             sid, q = next(iter(self._queued.items()))
-            adm = self._admission(q.n_nodes, self.bytes_in_use)
+            adm = self._admission(q.n_nodes, self.bytes_in_use, q.window)
             if not adm.admitted:
                 return
             del self._queued[sid]
             self._admit(sid, q.n_nodes, q.block_size, adm)
             for b in q.blocks:
-                self._active[sid].feed(b)
+                if isinstance(b, str):  # _ADVANCE epoch marker
+                    self._active[sid].advance()
+                else:
+                    self._active[sid].feed(b)

@@ -1,0 +1,104 @@
+"""Docs hygiene, tier-1: intra-repo markdown links must resolve, and no
+compiled python may ever be committed again.
+
+The docs (README, docs/ARCHITECTURE.md, docs/STREAMING.md, EXPERIMENTS.md,
+ROADMAP.md) cross-link each other heavily; a renamed file silently rots
+every inbound link. This test walks every tracked markdown file, extracts
+inline links, and asserts each relative target exists — so a dead link
+fails CI instead of a reader.
+"""
+import os
+import re
+import subprocess
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# [text](target) inline links; target must not contain spaces or parens
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def _tracked_files() -> list[str]:
+    out = subprocess.run(["git", "ls-files"], cwd=ROOT, capture_output=True,
+                         text=True, check=True)
+    return out.stdout.splitlines()
+
+
+def _markdown_files() -> list[str]:
+    # include untracked-but-not-ignored files so a freshly written doc is
+    # checked before its first commit, not after
+    out = subprocess.run(
+        ["git", "ls-files", "--cached", "--others", "--exclude-standard"],
+        cwd=ROOT, capture_output=True, text=True, check=True)
+    return [f for f in out.stdout.splitlines() if f.endswith(".md")]
+
+
+def _links_in(md_path: str) -> list[tuple[int, str]]:
+    """(line_no, target) for every inline link OUTSIDE fenced code blocks."""
+    links = []
+    in_fence = False
+    with open(os.path.join(ROOT, md_path), encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                links.append((i, m.group(1)))
+    return links
+
+
+def test_markdown_files_are_tracked():
+    """Sanity: the front-door docs this suite guards actually exist."""
+    md = set(_markdown_files())
+    for required in ("README.md", "EXPERIMENTS.md", "ROADMAP.md",
+                     "docs/ARCHITECTURE.md", "docs/STREAMING.md"):
+        assert required in md, f"{required} missing or untracked"
+
+
+def test_all_intra_repo_markdown_links_resolve():
+    broken = []
+    for md in _markdown_files():
+        for line_no, target in _links_in(md):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue  # external / same-file anchor: not checked here
+            path = target.split("#", 1)[0]  # drop the anchor
+            if not path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(ROOT, os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                broken.append(f"{md}:{line_no} -> {target}")
+    assert not broken, "dead intra-repo markdown links:\n" + "\n".join(broken)
+
+
+def test_front_door_docs_link_each_other():
+    """README links ARCHITECTURE + STREAMING; ARCHITECTURE links STREAMING —
+    the navigation contract of the docs set (a doc nobody links is a doc
+    nobody reads)."""
+    readme = [t for _, t in _links_in("README.md")]
+    assert any("docs/ARCHITECTURE.md" in t for t in readme)
+    assert any("docs/STREAMING.md" in t for t in readme)
+    arch = [t for _, t in _links_in("docs/ARCHITECTURE.md")]
+    assert any("STREAMING.md" in t for t in arch)
+    streaming = [t for _, t in _links_in("docs/STREAMING.md")]
+    assert streaming, "docs/STREAMING.md links nothing back"
+
+
+def test_no_compiled_python_is_tracked():
+    """__pycache__ sweep: stray .pyc like the once-committed
+    tests/__pycache__/*.pyc must never land in the tree again."""
+    offenders = [f for f in _tracked_files()
+                 if "__pycache__" in f or f.endswith((".pyc", ".pyo"))]
+    assert not offenders, f"compiled python tracked in git: {offenders}"
+
+
+def test_gitignore_covers_pycache():
+    gi = os.path.join(ROOT, ".gitignore")
+    assert os.path.exists(gi)
+    with open(gi) as f:
+        body = f.read()
+    assert "__pycache__" in body

@@ -1,12 +1,13 @@
-"""Multi-stream serving benchmark: S interleaved sessions vs S sequential
-``count_stream`` calls.
+"""Multi-stream serving benchmarks: interleaved sessions vs sequential
+streams, and the heavy-tailed FIFO vs fair-share+preemption scenario.
 
 This is the paper's "graph dynamically generated" regime turned into a
 serving workload: S edge streams arrive concurrently at one
 ``TriangleServer``; the ``StreamMultiplexer`` interleaves block ingest
-across all of them in admission order over ONE shared compile cache. The
-benchmark verifies the two serving claims and measures the cost of
-concurrency:
+across all of them over ONE shared compile cache.
+
+``bench_serve`` (op = ``serve_multiplex``) verifies the two serving claims
+and measures the cost of concurrency:
 
 - correctness: interleaved counts are bit-identical to S sequential
   ``count_stream`` runs (asserted every rep);
@@ -18,12 +19,25 @@ concurrency:
   the win is concurrency (S live streams per server instead of 1), not
   speed.
 
-Rows (op = ``serve_multiplex``) are MERGED into BENCH_kernels.json — all
-other ops' records are preserved. ``--quick`` is the CI-cheap variant
-(4 streams, small graphs, interpret-safe CPU defaults).
+``bench_preempt`` (op = ``serve_preempt``) is the ROADMAP's 100-session
+heavy-tailed scenario: a couple of WHALE streams whose bitset state pins
+nearly the whole device budget, plus ~98 small streams. Under strict FIFO
+the whales head-of-line-block everything — a small request's
+time-to-first-count is the whales' entire runtime. Under
+``policy="fair"`` the smalls open at higher priority, PREEMPT the whale
+(checkpoint to host), drain in parallel, and the whale readmits
+bit-identically afterwards — p50/p99 time-to-first-count collapse while
+every count stays exact (asserted against sequential oracles). Both
+policies drive the same backpressure-aware loop (feed only ACTIVE
+sessions, ``next_sid`` picks who goes next), so the delta is pure
+scheduling policy.
+
+Rows are MERGED into BENCH_kernels.json — all other ops' records are
+preserved. ``--quick`` is the CI-cheap variant (4 streams / 24 sessions,
+small graphs, interpret-safe CPU defaults).
 
 Usage: PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
-           [--streams S] [--out F]
+           [--streams S] [--out F] [--skip-preempt] [--skip-multiplex]
 """
 from __future__ import annotations
 
@@ -123,6 +137,108 @@ def bench_serve(*, quick: bool = False, n_streams: int | None = None,
     return records
 
 
+def _drive(mux, sids, blocks, t0):
+    """Backpressure-aware serving loop: close exhausted actives (recording
+    each session's time-to-first-count), then feed whichever ACTIVE session
+    ``next_sid`` picks — waiting sessions are never fed (no host buffering),
+    they get their turn when admission restores/admits them. Returns
+    {sid: (ttfc_s, CountResult)}."""
+    done = {}
+    pos = {sid: 0 for sid in sids}
+    while len(done) < len(sids):
+        for sid in sids:
+            if sid not in done and pos[sid] >= len(blocks[sid]) \
+                    and mux.status(sid) == "active":
+                r = mux.close(sid)
+                r.item()  # TTFC = count actually ready, not just dispatched
+                done[sid] = (time.perf_counter() - t0, r)
+        live = {sid for sid in sids
+                if sid not in done and pos[sid] < len(blocks[sid])
+                and mux.status(sid) == "active"}
+        sid = mux.next_sid(candidates=live) if live else None
+        if sid is not None:
+            mux.feed(sid, blocks[sid][pos[sid]])
+            pos[sid] += 1
+    return done
+
+
+def bench_preempt(*, quick: bool = False) -> list[dict]:
+    """Heavy-tailed TTFC: FIFO vs fair-share+preemption over one budget."""
+    from repro.api import Resources, TriangleCounter
+    from repro.serve.sessions import StreamMultiplexer
+
+    if quick:
+        n_whales, whale_n, whale_m = 1, 1024, 12_000
+        n_smalls, small_n, small_m = 23, 128, 600
+    else:
+        n_whales, whale_n, whale_m = 2, 2048, 30_000
+        n_smalls, small_n, small_m = 98, 256, 2_000
+    block = 1024
+    whale_state = 4 * whale_n * (-(-whale_n // 32))   # n²/8 dense bitset
+    small_state = 4 * small_n * (-(-small_n // 32))
+    # one whale + 8 smalls fit; everything else must queue or preempt
+    res = Resources(memory_bytes=whale_state + 8 * small_state, max_stages=1)
+
+    def make(n, m, seed):
+        g = gen.gnp(n, m / (n * (n - 1) / 2), seed=seed)
+        rng = np.random.default_rng(seed)
+        e = g.edges[rng.permutation(g.n_edges)]
+        return [e[j:j + block] for j in range(0, len(e), block)]
+
+    specs = ([(whale_n, make(whale_n, whale_m, 7000 + i), 0)
+              for i in range(n_whales)] +
+             [(small_n, make(small_n, small_m, 8000 + i), 1)
+              for i in range(n_smalls)])
+    S = len(specs)
+    shape = (f"S{S}/whales{n_whales}x{whale_n}/smalls{n_smalls}x{small_n}"
+             f"/b{block}")
+    oracle_counter = TriangleCounter()
+    oracles = [oracle_counter.count_stream(n, bs).item() for n, bs, _ in specs]
+
+    records = []
+    p99s = {}
+    for policy in ("fifo", "fair"):
+        # two passes: the first warms the (process-wide) ingest traces so
+        # neither policy is charged compile time the other reuses
+        for rep in ("warmup", "measured"):
+            mux = StreamMultiplexer(
+                TriangleCounter(res), res, block_size=block, policy=policy,
+                # the store must hold every concurrently-preempted whale
+                checkpoint_budget_bytes=2 * n_whales * whale_state)
+            t0 = time.perf_counter()
+            sids, blocks = [], {}
+            for n, bs, prio in specs:  # whales arrive FIRST — the worst case
+                sid = mux.open(n, priority=prio if policy == "fair" else 0)
+                sids.append(sid)
+                blocks[sid] = bs
+            done = _drive(mux, sids, blocks, t0)
+            total_ms = (time.perf_counter() - t0) * 1e3
+        for sid, want, (n, _, _) in zip(sids, oracles, specs):
+            got = done[sid][1].item()
+            assert got == want, f"{policy} sid={sid} n={n}: {got} != {want}"
+        ttfc = np.array(sorted(t * 1e3 for t, _ in done.values()))
+        p50, p99 = np.percentile(ttfc, 50), np.percentile(ttfc, 99)
+        p99s[policy] = p99
+        method = "fifo" if policy == "fifo" else "fair_preempt"
+        records.append({
+            "op": "serve_preempt", "shape": shape, "method": method,
+            "median_ms": round(float(p50), 3), "grid_steps": S,
+            "p99_ms": round(float(p99), 3),
+            "total_ms": round(total_ms, 3),
+            "preemptions": mux.sched_stats["preemptions"],
+            "restores": mux.sched_stats["restores"],
+        })
+        print(f"  {method:22s} TTFC p50 {p50:9.1f} ms  p99 {p99:9.1f} ms  "
+              f"total {total_ms:9.1f} ms  "
+              f"({mux.sched_stats['preemptions']} preemptions, "
+              f"{mux.sched_stats['restores']} restores)")
+    if not quick:
+        assert p99s["fair"] < p99s["fifo"], (
+            f"fair-share+preemption must beat FIFO p99 TTFC: "
+            f"{p99s['fair']:.1f} vs {p99s['fifo']:.1f} ms")
+    return records
+
+
 def merge_bench_json(records: list[dict], out_path: str = DEFAULT_OUT) -> str:
     """Append/refresh the serve rows in BENCH_kernels.json, preserving every
     other op's records — kernel_bench's writer owns the one merge
@@ -144,11 +260,19 @@ def main() -> None:
                     help="number of concurrent streams (default 4 quick / 8 full)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help=f"BENCH json to merge into (default {DEFAULT_OUT})")
+    ap.add_argument("--skip-preempt", action="store_true",
+                    help="skip the heavy-tailed FIFO-vs-fair scenario")
+    ap.add_argument("--skip-multiplex", action="store_true",
+                    help="skip the interleaved-vs-sequential scenario")
     args = ap.parse_args()
     print(f"serve_bench: backend={jax.default_backend()} quick={args.quick}")
-    records = bench_serve(quick=args.quick, n_streams=args.streams)
+    records = []
+    if not args.skip_multiplex:
+        records += bench_serve(quick=args.quick, n_streams=args.streams)
+    if not args.skip_preempt:
+        records += bench_preempt(quick=args.quick)
     path = merge_bench_json(records, args.out)
-    print(f"merged {len(records)} serve_multiplex records into {path}")
+    print(f"merged {len(records)} serve records into {path}")
 
 
 if __name__ == "__main__":

@@ -38,8 +38,12 @@ Streams are served concurrently through sessions:
 (open → feed blocks → finalize; ``count_stream`` is the one-session
 wrapper), ``admit_session`` budgets how many sessions' pinned bitset states
 (n²/8/S bytes each) fit ``Resources.memory_bytes`` — admit-dense vs
-admit-sharded vs queue — and ``serve.StreamMultiplexer`` interleaves block
-ingest across admitted sessions over one shared compile cache.
+admit-sharded vs preempt vs queue — and ``serve.StreamMultiplexer``
+interleaves block ingest across admitted sessions over one shared compile
+cache. Sessions are PREEMPTIBLE: ``StreamSession.checkpoint()`` snapshots
+the bitset/ring state to host memory as a ``SessionCheckpoint`` (spillable
+to disk) and ``TriangleCounter.restore_stream`` resumes it bit-identically;
+bounded host budgets surface as ``BackpressureError`` instead of OOM.
 
 ``count_triangles(g, method=...)`` survives as a deprecated shim over the
 default counter.
@@ -48,6 +52,7 @@ from repro.api.planner import (
     METHODS,
     MR_RF_FACTOR,
     Admission,
+    BackpressureError,
     GraphStats,
     Plan,
     Resources,
@@ -58,6 +63,7 @@ from repro.api.planner import (
 )
 from repro.api.counter import (
     CountResult,
+    SessionCheckpoint,
     StreamSession,
     TriangleCounter,
     bucket,
@@ -69,6 +75,7 @@ __all__ = [
     "METHODS",
     "MR_RF_FACTOR",
     "Admission",
+    "BackpressureError",
     "GraphStats",
     "Plan",
     "Resources",
@@ -77,6 +84,7 @@ __all__ = [
     "plan_for_graph",
     "stream_sizing",
     "CountResult",
+    "SessionCheckpoint",
     "StreamSession",
     "TriangleCounter",
     "bucket",

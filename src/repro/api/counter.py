@@ -12,6 +12,8 @@ aggregation, the serve loop) never pay a host sync per call.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Any, Iterable
 
@@ -55,6 +57,120 @@ class CountResult:
 
     def __int__(self) -> int:
         return self.item()
+
+
+@dataclasses.dataclass
+class SessionCheckpoint:
+    """A host-side, bit-exact snapshot of one :class:`StreamSession` — the
+    unit of preemption, spill, and (future) cross-worker migration.
+
+    Taken by :meth:`StreamSession.checkpoint` (which first flushes the
+    buffered tail so the snapshot boundary is exactly "every edge fed so
+    far") and consumed by :meth:`TriangleCounter.restore_stream`, which
+    resumes the stream BIT-IDENTICALLY: same state arrays, same compile-cache
+    key (so restore never retraces an already-traced block shape), same
+    sticky re-blocking shapes (``buffer_shape``), same running stats.
+
+    ``arrays`` is the numpy rendering of the session's state dict —
+    ``{adj, count}`` unbounded, ``{epochs, counts, head}`` windowed, with the
+    leading stage axis kept for sharded states (the emulated and mesh
+    layouts share it, so a checkpoint taken on either restores onto either).
+    ``nbytes`` is what the snapshot charges against a host checkpoint budget;
+    ``state_bytes`` is the per-stage device footprint the session pins when
+    restored (what admission re-charges on readmission). ``spill``/``load``
+    round-trip the checkpoint through one ``.npz`` file for storage beyond
+    the host budget — ``arrays`` is None while spilled.
+    """
+
+    n_nodes: int
+    plan: Plan
+    block_size: int
+    state_bytes: int
+    nbytes: int
+    arrays: dict | None
+    buffer_shape: dict
+    n_blocks: int
+    n_epochs_advanced: int
+    wall_s: float
+    path: str | None = None
+
+    @property
+    def spilled(self) -> bool:
+        return self.arrays is None
+
+    def spill(self, path: str) -> None:
+        """Move the snapshot arrays from host memory to one ``.npz`` at
+        ``path`` (everything else — plan, shapes, stats — stays in the
+        object). Idempotent on an already-spilled checkpoint."""
+        if self.arrays is None:
+            return
+        meta = json.dumps({
+            "n_nodes": self.n_nodes, "plan": self.plan.to_dict(),
+            "block_size": self.block_size, "state_bytes": self.state_bytes,
+            "nbytes": self.nbytes, "buffer_shape": self.buffer_shape,
+            "n_blocks": self.n_blocks,
+            "n_epochs_advanced": self.n_epochs_advanced,
+            "wall_s": self.wall_s})
+        np.savez(path, __meta__=np.array(meta), **self.arrays)
+        self.arrays, self.path = None, path
+
+    def load_arrays(self) -> dict:
+        """The snapshot arrays, loading (and deleting) the spill file if the
+        checkpoint was spilled."""
+        if self.arrays is None:
+            with np.load(self.path) as z:
+                self.arrays = {k: z[k] for k in z.files if k != "__meta__"}
+            os.remove(self.path)
+            self.path = None
+        return self.arrays
+
+    def discard(self) -> None:
+        """Drop the snapshot (and its spill file, if any) — a cancelled
+        session's state is not coming back."""
+        if self.path is not None and os.path.exists(self.path):
+            os.remove(self.path)
+        self.arrays, self.path = None, None
+
+    def finalize_result(self) -> "CountResult":
+        """Finalize WITHOUT touching the device: ``checkpoint()`` flushed the
+        buffered tail, so the snapshot already covers every edge fed and the
+        count is simply read out of the host arrays — the running total for
+        unbounded sessions, the sum over the epoch ring's per-slot counters
+        for windowed ones. Value and dtype are bit-identical to restoring
+        and finalizing; the scheduler uses this as the zero-cost close for a
+        parked session nobody fed since its checkpoint."""
+        arrays = self.load_arrays()
+        p = self.plan
+        if p.window_epochs:
+            count = jnp.asarray(arrays["counts"].sum(
+                dtype=arrays["counts"].dtype))
+        else:
+            count = jnp.asarray(arrays["count"])
+        stats = {"n_blocks": self.n_blocks, "block_size": self.block_size,
+                 "n_stages": p.n_stages, "sharded": p.n_stages > 1,
+                 "session": True, "from_checkpoint": True,
+                 "state_bytes": self.nbytes}
+        if p.window_epochs:
+            stats["window_epochs"] = p.window_epochs
+            stats["epochs_advanced"] = self.n_epochs_advanced
+        return CountResult(count=count, plan=p, wall_s=self.wall_s,
+                           stats=stats)
+
+    @classmethod
+    def from_file(cls, path: str) -> "SessionCheckpoint":
+        """Rehydrate a checkpoint something else spilled/shipped — the
+        migration entry point (checkpoint on worker A, ``from_file`` +
+        ``restore_stream`` on worker B)."""
+        with np.load(path) as z:
+            meta = json.loads(str(z["__meta__"][()]))
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        return cls(n_nodes=meta["n_nodes"], plan=Plan.from_dict(meta["plan"]),
+                   block_size=meta["block_size"],
+                   state_bytes=meta["state_bytes"], nbytes=meta["nbytes"],
+                   arrays=arrays, buffer_shape=meta["buffer_shape"],
+                   n_blocks=meta["n_blocks"],
+                   n_epochs_advanced=meta["n_epochs_advanced"],
+                   wall_s=meta["wall_s"])
 
 
 class _Entry:
@@ -174,6 +290,36 @@ class TriangleCounter:
             block_size = p.block_size
         return StreamSession(self, n_nodes, p, block_size,
                              self._mesh_matches(p.n_stages))
+
+    def restore_stream(self, ckpt: SessionCheckpoint) -> "StreamSession":
+        """Resume a checkpointed stream session — the other half of
+        :meth:`StreamSession.checkpoint` and the primitive under the
+        scheduler's preemption (and a future multi-host router's migration).
+
+        The restored session continues BIT-IDENTICALLY to one that was never
+        interrupted: the state arrays are rehydrated exactly
+        (``core.streaming.restore_state``), the session registers under the
+        SAME compile-cache key as the original — so restoring onto a counter
+        that has already traced the stream's block shapes retraces nothing —
+        and the re-blocking buffer resumes the checkpoint's sticky shapes.
+        The checkpoint's plan must be a stream plan (it always is when the
+        checkpoint came from ``checkpoint()``); restoring a ring-sharded
+        checkpoint works on mesh and emulated counters alike (the layouts
+        share the stage-major shape). The session re-pins its
+        ``state_bytes`` on device the moment it is constructed — callers
+        budgeting admission charge it exactly like a fresh open."""
+        from repro.core import streaming
+
+        session = StreamSession(
+            self, ckpt.n_nodes, ckpt.plan, ckpt.block_size,
+            self._mesh_matches(ckpt.plan.n_stages),
+            state=streaming.restore_state(ckpt.load_arrays()))
+        session._buffer.import_shape_state(ckpt.buffer_shape)
+        session.n_blocks = ckpt.n_blocks
+        session.n_epochs_advanced = ckpt.n_epochs_advanced
+        session._wall = ckpt.wall_s
+        session.restored = True
+        return session
 
     def count_stream(self, n_nodes: int, blocks: Iterable, *,
                      plan: Plan | None = None,
@@ -499,7 +645,7 @@ class StreamSession:
     """
 
     def __init__(self, counter: TriangleCounter, n_nodes: int, plan: Plan,
-                 block_size: int, on_mesh: bool):
+                 block_size: int, on_mesh: bool, *, state: dict | None = None):
         from repro.core import streaming
 
         self.counter = counter
@@ -512,7 +658,12 @@ class StreamSession:
             self._key, lambda e: counter._make_stream(e, plan, on_mesh))
         self._cache_hit = self._entry.hits > 0
         self._on_mesh = on_mesh
-        if plan.window_epochs:
+        self.restored = False
+        if state is not None:
+            # restore path (TriangleCounter.restore_stream): adopt the
+            # checkpointed arrays instead of allocating zeros
+            self.state = state
+        elif plan.window_epochs:
             if plan.n_stages > 1:
                 self.state = streaming.init_windowed_sharded_state(
                     n_nodes, plan.window_epochs, plan.n_stages)
@@ -545,14 +696,54 @@ class StreamSession:
     def feed(self, edges) -> None:
         """Buffer ``edges`` ((B, 2) array-like, any B including ragged);
         ingest every full ``block_size`` block they completed (into the
-        CURRENT epoch for windowed sessions)."""
+        CURRENT epoch for windowed sessions). Front-door validation
+        (``core.streaming.validate_edges``): non-integer arrays, shapes
+        other than (B, 2), and vertex ids outside ``[0, n_nodes)`` raise
+        ``ValueError`` — out-of-range ids would otherwise scatter silently
+        outside (or wrap around inside) the bitset."""
         if self.result is not None:
             raise RuntimeError("session already finalized")
+        from repro.core import streaming
+
+        edges = streaming.validate_edges(edges, self.n_nodes)
         t0 = time.perf_counter()
         for b in self._buffer.push(edges):
             self.state = self._entry.fn(self.state, b)
             self.n_blocks += 1
         self._wall += time.perf_counter() - t0
+
+    def checkpoint(self) -> SessionCheckpoint:
+        """Snapshot this session to host memory — the preemption primitive.
+
+        The buffered tail is flushed and ingested first (the epoch-ring /
+        bitset layout makes the boundary well-defined: after the flush the
+        device state covers EXACTLY the edges fed so far), then every state
+        array is copied to host numpy bit-exactly. The session itself stays
+        usable (checkpoint is a snapshot, not a close) — the scheduler that
+        wants the device bytes back simply drops its reference after
+        checkpointing. ``restore_stream`` on the checkpoint resumes
+        bit-identically, with no retrace for block shapes this counter has
+        already traced (same cache key, sticky tail shapes carried over).
+        Raises after ``finalize`` — a closed session has a result, not
+        state."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        from repro.core import streaming
+
+        t0 = time.perf_counter()
+        tail = self._buffer.flush()
+        if tail is not None:
+            self.state = self._entry.fn(self.state, tail)
+            self.n_blocks += 1
+        arrays = streaming.snapshot_state(self.state)
+        self._wall += time.perf_counter() - t0
+        return SessionCheckpoint(
+            n_nodes=self.n_nodes, plan=self.plan, block_size=self.block_size,
+            state_bytes=self.state_bytes,
+            nbytes=streaming.state_nbytes(arrays), arrays=arrays,
+            buffer_shape=self._buffer.export_shape_state(),
+            n_blocks=self.n_blocks, n_epochs_advanced=self.n_epochs_advanced,
+            wall_s=self._wall)
 
     def advance(self) -> None:
         """Slide a WINDOWED session's window by one epoch: the buffered tail

@@ -24,6 +24,18 @@ import numpy as np
 # Every method the planner can emit; executed by api.counter.TriangleCounter.
 METHODS = ("dense", "ring", "sparse", "bitset_ring", "mapreduce", "stream")
 
+
+class BackpressureError(RuntimeError):
+    """A bounded host-side budget would be exceeded — graceful degradation
+    instead of host OOM.
+
+    Raised by the serving tier when feeding a queued/preempted session would
+    overflow the queue buffer budget, or when checkpointing a session would
+    overflow both the host checkpoint budget and the disk spill budget. The
+    caller should retry after closing/draining sessions (or raise its own
+    budgets); unlike the old unbounded FIFO buffering, the server's host
+    memory never grows past the configured bounds."""
+
 # MapReduce is inadmissible once Round-I output exceeds this multiple of the
 # input (the paper's dense-graph blowup: RF / m grows with density·n).
 MR_RF_FACTOR = 8
@@ -349,19 +361,29 @@ class Admission:
 
     ``action`` is ``"admit-dense"`` (plan has ``n_stages == 1``: the session's
     full n²/8 bitset fits the remaining budget), ``"admit-sharded"``
-    (``n_stages > 1``: only a n²/8/S column shard per stage fits), or
-    ``"queue"`` (``plan`` is None: even the max-ring-width shard exceeds what
-    is left — the request must wait for an active session to close instead of
-    OOMing the server). ``state_bytes`` is the per-stage bytes the session
-    will pin while open — what the multiplexer adds to its in-use accounting
-    on admit. Windowed sessions (``plan.window_epochs = E > 0``) pin E epoch
-    bitsets, so every figure above is ×E: E·n²/8 dense, E·n²/8/S per stage.
+    (``n_stages > 1``: only a n²/8/S column shard per stage fits),
+    ``"preempt"`` (it fits only if the active sessions named by ``victims``
+    are first checkpointed off the device — the fair-share verdict: every
+    victim has STRICTLY lower priority than the request), or ``"queue"``
+    (``plan`` is None: even the max-ring-width shard exceeds what is left
+    and no preemption can free it — the request must wait for an active
+    session to close instead of OOMing the server). ``state_bytes`` is the
+    per-stage bytes the session will pin while open — what the multiplexer
+    adds to its in-use accounting on admit. Windowed sessions
+    (``plan.window_epochs = E > 0``) pin E epoch bitsets, so every figure
+    above is ×E: E·n²/8 dense, E·n²/8/S per stage.
+
+    ``victims`` are indices into the ``actives`` sequence the caller passed
+    to :func:`admit_session` — the minimal greedy set (lowest priority
+    first, then largest state) whose checkpointed bytes, added to the
+    remaining budget, fit the request. Empty for every other action.
     """
 
     action: str
     plan: Plan | None
     state_bytes: int
     reason: str
+    victims: tuple = ()
 
     @property
     def admitted(self) -> bool:
@@ -369,7 +391,8 @@ class Admission:
 
 
 def admit_session(n_nodes: int, resources: Resources | None = None, *,
-                  bytes_in_use: int = 0, window_epochs: int = 0) -> Admission:
+                  bytes_in_use: int = 0, window_epochs: int = 0,
+                  priority: int = 0, actives=None) -> Admission:
     """Decide whether one more concurrent stream of ``n_nodes`` nodes fits.
 
     A stream session pins its adjacency-so-far bitset for its whole lifetime
@@ -385,6 +408,17 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
     discount is the planner's mesh model; the multiplexer re-takes the
     decision at ring width 1 when no matching mesh hosts the stage axis
     (host-emulated sharding pins all S shards on one device).
+
+    FAIR-SHARE PREEMPTION (the Afrati–Ullman replication-vs-memory tradeoff
+    extended to residency-vs-spill): ``actives`` is the scheduler's view of
+    the currently active sessions as ``(state_bytes, priority)`` pairs. When
+    the request does not fit the remainder but checkpointing active sessions
+    of STRICTLY lower ``priority`` would free enough device state, the
+    verdict is ``"preempt"`` with ``victims`` naming the minimal greedy set
+    (lowest priority first, then largest state — fewest checkpoints for the
+    most freed bytes). Equal-priority actives are never preempted (no
+    priority-tie thrashing); with ``actives=None`` (or no eligible victims)
+    the verdict degrades to plain admit/queue exactly as before.
     """
     res = resources or Resources()
     remaining = max(res.memory_bytes - bytes_in_use, 0)
@@ -395,12 +429,38 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
                                              window_epochs=window_epochs)
     window = f"windowed ({window_epochs} epochs) " if window_epochs else ""
     if shard_bytes > remaining:
+        # preemption sweep: grow the budget victim by victim (lowest
+        # priority, then largest state) until the request's shard fits
+        eligible = sorted(
+            (i for i, (nbytes, prio) in enumerate(actives or ())
+             if prio < priority),
+            key=lambda i: (actives[i][1], -actives[i][0], i))
+        freed, victims = 0, []
+        for i in eligible:
+            freed += actives[i][0]
+            victims.append(i)
+            sub_k = dataclasses.replace(res, memory_bytes=remaining + freed)
+            n_stages, _, shard_bytes = stream_sizing(
+                stats, sub_k, window_epochs=window_epochs)
+            if shard_bytes <= remaining + freed:
+                kind = "sharded" if n_stages > 1 else "dense"
+                return Admission(
+                    action="preempt",
+                    plan=plan(stats, sub_k, window_epochs=window_epochs),
+                    state_bytes=shard_bytes, victims=tuple(victims),
+                    reason=(f"preempt: {window}{shard_bytes} B/stage state "
+                            f"fits only after checkpointing {len(victims)} "
+                            f"lower-priority active(s) ({freed} B freed, "
+                            f"priority {priority} over "
+                            f"{[actives[i][1] for i in victims]})"))
         return Admission(
             action="queue", plan=None, state_bytes=shard_bytes,
             reason=(f"{window}state shard needs {shard_bytes} B but "
                     f"{remaining} B of {res.memory_bytes} B remain (even at "
-                    f"ring width {n_stages}) — queue until an active session "
-                    f"closes"))
+                    f"ring width {n_stages}"
+                    + (f"; preempting all {len(eligible)} lower-priority "
+                       f"active(s) frees only {freed} B" if eligible else "")
+                    + ") — queue until an active session closes"))
     kind = "sharded" if n_stages > 1 else "dense"
     return Admission(
         action=f"admit-{kind}",

@@ -135,6 +135,62 @@ def init_windowed_sharded_state(n_nodes: int, window_epochs: int,
     }
 
 
+def validate_edges(edges, n_nodes: int) -> np.ndarray:
+    """Front-door edge validation: the (B, 2) int array contract, enforced.
+
+    The ingest paths treat ids >= n as phantoms (silently dropped) and a
+    NEGATIVE id would gather/scatter at a wrapped index — silent corruption
+    of the bitset. So the serving front door (``StreamSession.feed`` and the
+    multiplexer/server above it) rejects anything outside the contract with
+    a clear ``ValueError`` instead: non-integer dtypes, shapes that are not
+    (B, 2), and vertex ids outside ``[0, n_nodes)``. Returns the validated
+    int32 (B, 2) array (zero-copy when already conforming); empty inputs of
+    any shape normalize to (0, 2)."""
+    arr = np.asarray(edges)
+    if arr.size == 0:
+        return np.zeros((0, 2), np.int32)
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"edges must be an integer array, got dtype {arr.dtype} — vertex "
+            f"ids are indices, not floats")
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(
+            f"edges must have shape (B, 2) (one (u, v) pair per row), got "
+            f"{arr.shape}")
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi >= n_nodes:
+        raise ValueError(
+            f"vertex ids must lie in [0, {n_nodes}), got range [{lo}, {hi}] "
+            f"— out-of-range ids would silently scatter outside the bitset")
+    return arr.astype(np.int32, copy=False)
+
+
+def snapshot_state(state: dict) -> dict:
+    """Bit-exact HOST copy of any streaming state (dense, sharded, windowed,
+    on-mesh): the checkpoint half of checkpoint/restore. Blocks until every
+    in-flight ingest into ``state`` has completed (the snapshot boundary),
+    then copies each array to host numpy — a mesh-sharded state is gathered
+    to one host array, which restores onto any layout (the emulated and mesh
+    shardings share the (S, ...) shape). Traces nothing."""
+    state = jax.block_until_ready(state)
+    return {k: np.asarray(v) for k, v in state.items()}
+
+
+def restore_state(snap: dict) -> dict:
+    """Device rehydration of a :func:`snapshot_state` copy — the restore
+    half. ``jnp.asarray`` preserves dtype and bits exactly, so a restored
+    stream continues bit-identically to one that was never interrupted.
+    Traces nothing (a jitted ingest step re-shards the arrays on first use
+    when the session is mesh-sharded)."""
+    return {k: jnp.asarray(v) for k, v in snap.items()}
+
+
+def state_nbytes(state: dict) -> int:
+    """Total bytes of a state dict or host snapshot — what a checkpoint
+    charges against the host/disk budgets."""
+    return int(sum(v.nbytes for v in state.values()))
+
+
 # Retrace telemetry: the traced-function body runs once per (shape, dtype)
 # specialization, so this counts compiles, not calls. With ``padded_blocks``
 # feeding fixed-shape blocks, one stream takes exactly one trace.
@@ -704,6 +760,25 @@ class BlockBuffer:
         self._buffered = 0
         self._emitted_full = False
         self._tail_target = 0  # sticky pow2 tail shape across repeated flushes
+
+    def export_shape_state(self) -> dict:
+        """The re-blocking continuity a session checkpoint must carry: the
+        adopted ``block_size`` plus the sticky tail-shape state. A restored
+        buffer that imports this emits exactly the shapes the original would
+        have — the no-retrace-on-restore half of the checkpoint contract.
+        (The buffered edges themselves are NOT exported: ``checkpoint()``
+        flushes the tail first, so the buffer is empty at the snapshot
+        boundary.)"""
+        return {"block_size": self.block_size,
+                "tail_target": self._tail_target,
+                "emitted_full": self._emitted_full}
+
+    def import_shape_state(self, shape_state: dict) -> None:
+        """Adopt a checkpointed buffer's shape continuity (see
+        :meth:`export_shape_state`)."""
+        self.block_size = shape_state["block_size"]
+        self._tail_target = shape_state["tail_target"]
+        self._emitted_full = shape_state["emitted_full"]
 
     def push(self, block) -> list[jax.Array]:
         """Buffer ``block``; return every full ``block_size`` block it

@@ -2,8 +2,10 @@
 
 ``serve_loop`` holds the batched request servers (``LMServer``,
 ``TriangleServer``); ``sessions`` holds the concurrent multi-stream
-machinery (``StreamMultiplexer`` over ``api.StreamSession``).
+machinery — ``StreamMultiplexer`` (the preemptible fair-share scheduler
+over ``api.StreamSession``) and ``CheckpointStore`` (its bounded host/disk
+parking lot for preempted sessions' checkpoints).
 """
-from repro.serve.sessions import StreamMultiplexer
+from repro.serve.sessions import CheckpointStore, StreamMultiplexer
 
-__all__ = ["StreamMultiplexer"]
+__all__ = ["CheckpointStore", "StreamMultiplexer"]

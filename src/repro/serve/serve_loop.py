@@ -91,7 +91,11 @@ class TriangleServer:
     ``serve_stream`` keeps the pre-session one-stream signature. Admission is
     the planner's budget (``admit_session``): sessions whose pinned bitset
     state would overcommit ``Resources.memory_bytes`` queue host-side instead
-    of OOMing the server. Results come back as per-request ``CountResult``s
+    of OOMing the server — and the multiplexer's scheduler is PREEMPTIBLE
+    (see ``serve.sessions``): per-session ``priority=`` / ``deadline_s=``,
+    ``preempt_stream`` to park an active session's state host-side, bounded
+    queue/checkpoint budgets that raise ``BackpressureError`` instead of
+    buffering toward OOM. Results come back as per-request ``CountResult``s
     in request order — counts stay device arrays, so an aggregating caller
     syncs once, not per request.
     """
@@ -140,14 +144,18 @@ class TriangleServer:
 
     # -- streaming sessions ------------------------------------------------
     def open_stream(self, n_nodes: int, *, block_size: int | None = None,
-                    window: int | None = None) -> int:
+                    window: int | None = None, priority: int = 0,
+                    deadline_s: float | None = None) -> int:
         """Open one streaming session on the server's multiplexer; returns
-        its session id (admitted, or queued if the planner's budget says the
-        state would overcommit memory — see ``serve.sessions``).
+        its session id (admitted, queued, or admitted by preempting
+        strictly-lower-priority actives — see ``serve.sessions``).
         ``window=E`` opens a sliding-window session (admission charges its
         E·n²/8(/S) epoch-ring state); windowed and unbounded sessions
-        multiplex over the same compile cache."""
-        return self.streams.open(n_nodes, block_size=block_size, window=window)
+        multiplex over the same compile cache. ``priority`` ranks the
+        session for fair-share scheduling; ``deadline_s`` reaps it if idle
+        that long (device state parked, then cancelled)."""
+        return self.streams.open(n_nodes, block_size=block_size, window=window,
+                                 priority=priority, deadline_s=deadline_s)
 
     def feed(self, sid: int, edges) -> None:
         """Feed one (B, 2) edge block to an open session (the current epoch
@@ -160,8 +168,20 @@ class TriangleServer:
         as an epoch marker while the session is queued)."""
         self.streams.advance(sid)
 
+    def preempt_stream(self, sid: int) -> None:
+        """Park an ACTIVE session's device state host-side (checkpoint into
+        the multiplexer's bounded store) — it readmits transparently when
+        budget frees, and ``close_stream`` on it restores first so the count
+        is exact (see ``StreamMultiplexer.preempt``)."""
+        self.streams.preempt(sid)
+
+    def stream_status(self, sid: int) -> str:
+        """``"active"`` / ``"queued"`` / ``"preempted"`` / ``"closed"``."""
+        return self.streams.status(sid)
+
     def close_stream(self, sid: int):
-        """Finalize a session; returns its ``CountResult`` (idempotent)."""
+        """Finalize a session; returns its ``CountResult`` (idempotent;
+        cancels a never-admitted session, restores a preempted one)."""
         return self.streams.close(sid)
 
     def serve_streams(self, requests, *, block_size: int | None = None) -> list:

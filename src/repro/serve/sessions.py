@@ -1,11 +1,12 @@
-"""Concurrent multi-stream serving: many ``StreamSession``s, one budget.
+"""Concurrent multi-stream serving: many ``StreamSession``s, one budget,
+and a PREEMPTIBLE fair-share scheduler on top.
 
 ``serve_stream`` used to mean one stream at a time per server — the paper's
 "dynamically generated graph" regime capped at a single generator. The
 :class:`StreamMultiplexer` lifts that: it holds any number of open sessions,
-interleaves block ingest across them in admission order, and shares the
-server's ONE ``TriangleCounter`` compile cache, so S concurrent streams
-feeding one block shape cost exactly one trace.
+interleaves block ingest across them, and shares the server's ONE
+``TriangleCounter`` compile cache, so S concurrent streams feeding one block
+shape cost exactly one trace.
 
 The memory story is the planner's (``api.planner.admit_session``): each
 active session pins its adjacency-so-far bitset — n²/8 bytes dense, n²/8/S
@@ -13,22 +14,38 @@ per stage when the admission plan is ring-sharded, ×E for a sliding-window
 session of E epoch bitsets — and the multiplexer accounts those pinned
 bytes against ``Resources.memory_bytes`` (the per-stage discount only
 applies when the counter's mesh actually hosts the stage axis —
-host-emulated sharding pays the full bitset). A request that does not fit
-RIGHT NOW is QUEUED, not opened: its feeds buffer host-side (numpy,
-proportional to the edges fed while waiting; window advances buffer as
-epoch markers so replay preserves epoch boundaries) and it is admitted
-FIFO — never around an earlier queued request — as active sessions close,
-with the buffered blocks replayed on admission. A request that could never
-fit even on an idle server is rejected at ``open`` instead of queueing
-forever. Queueing trades host buffer for device state; it never
-overcommits the device.
+host-emulated sharding pays the full bitset). Residency is now a SCHEDULING
+decision, not a permanent grant:
+
+- **Fair share + preemption** (``policy="fair"``, the default): every
+  session opens with a ``priority=`` (higher runs first; default 0). A
+  higher-priority ``open`` that would otherwise queue instead PREEMPTS
+  strictly-lower-priority actives — ``StreamSession.checkpoint()`` parks
+  their bitset state host-side in a bounded :class:`CheckpointStore`
+  (spilling to ``.npz`` under ``spill_dir`` past the host budget) and
+  ``TriangleCounter.restore_stream`` readmits them bit-identically once
+  budget frees. Equal priorities never preempt each other, so an
+  all-default-priority workload degrades to exactly the old FIFO.
+  ``policy="fifo"`` disables priorities and preemption outright.
+- **Bounded backpressure**: a waiting session's feeds buffer host-side
+  (numpy; window advances buffer as epoch markers so replay preserves
+  epoch boundaries) but only up to ``queue_budget_bytes`` ACROSS all
+  waiters; past it ``feed`` raises
+  :class:`~repro.api.planner.BackpressureError` instead of buffering
+  toward host OOM. The checkpoint store is bounded the same way
+  (``checkpoint_budget_bytes`` host + ``spill_budget_bytes`` disk).
+- **Deadlines**: ``open(..., deadline_s=T)`` reaps a session idle longer
+  than T — an abandoned ACTIVE stream is checkpointed off the device
+  (pinned n²/8(/S) bytes freed; a late ``close`` still recovers the true
+  count), and if it stays idle another T (or the store is full) it is
+  cancelled outright. A request that could never fit even on an idle
+  server is still rejected at ``open``.
 
 WINDOWED and UNBOUNDED sessions multiplex over the SAME compile cache:
-``open(n, window=E)`` admits a sliding-window session (the windowed ingest
-is its own module-level jit, so windowed sessions share one trace per block
-shape with each other, across all their epochs, while unbounded sessions
-share theirs), and ``advance(sid)`` slides one session's window without
-touching its neighbours.
+``open(n, window=E)`` admits a sliding-window session, and ``advance(sid)``
+slides one session's window without touching its neighbours. Checkpoints
+capture the whole epoch ring (plus the re-blocking cursor), so preemption
+is legal mid-window.
 
 Single-driver concurrency: sessions are interleavable from one thread (the
 serve loop), not thread-safe.
@@ -36,206 +53,646 @@ serve loop), not thread-safe.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
+import os
+import time
 
+import jax.numpy as jnp
 import numpy as np
 
-# Epoch marker in a queued session's host-side buffer: replayed as advance()
+from repro.utils import count_dtype
+
+# Epoch marker in a waiting session's host-side buffer: replayed as advance()
 # so a windowed request admitted late still sees its epoch boundaries.
 _ADVANCE = "advance"
 
 
 @dataclasses.dataclass
-class _QueuedStream:
+class _Session:
+    """One scheduler record, live for the session's whole non-closed life.
+
+    ``state`` is the machine the docs draw: ``"queued"`` (never admitted; no
+    device state, no checkpoint) → ``"active"`` (``session`` is the live
+    ``StreamSession``, ``state_bytes`` pinned) ⇄ ``"preempted"`` (device
+    state parked in the ``CheckpointStore``; ``state_bytes`` is what
+    readmission will re-pin) → closed (record dropped, result cached)."""
+
+    sid: int
     n_nodes: int
     block_size: int | None
     window: int | None
-    blocks: list  # host-side numpy buffers + _ADVANCE markers, replayed in order
+    priority: int
+    deadline_s: float | None
+    last_activity: float
+    state: str = "queued"
+    session: object | None = None
+    blocks: list = dataclasses.field(default_factory=list)
+    buffered_bytes: int = 0
+    state_bytes: int = 0
+    n_preempts: int = 0
+    served_blocks: int = 0
+    # parked = deliberately benched (explicit preempt / deadline reap): the
+    # scheduler leaves it out of readmission sweeps until new activity marks
+    # it live again (or close() forces the restore). Victims of a
+    # priority-preemption are NOT parked — they readmit transparently.
+    parked: bool = False
+
+
+class CheckpointStore:
+    """Bounded parking lot for preempted sessions' checkpoints.
+
+    Host memory first (up to ``host_budget_bytes`` of snapshot arrays), then
+    ``.npz`` spill files under ``spill_dir`` (up to ``spill_budget_bytes``,
+    default 4× the host budget when a spill dir is given, 0 otherwise). A
+    checkpoint that fits neither raises
+    :class:`~repro.api.planner.BackpressureError` — parking is bounded, like
+    every other host-side buffer in the serving tier. ``put_all`` is
+    transactional: it places every checkpoint or none, so a multi-victim
+    preemption never half-commits."""
+
+    def __init__(self, host_budget_bytes: int, *, spill_dir: str | None = None,
+                 spill_budget_bytes: int | None = None):
+        self.host_budget_bytes = int(host_budget_bytes)
+        self.spill_dir = spill_dir
+        if spill_budget_bytes is None:
+            spill_budget_bytes = 4 * self.host_budget_bytes if spill_dir else 0
+        self.spill_budget_bytes = int(spill_budget_bytes)
+        self.host_bytes = 0
+        self.spill_bytes = 0
+        self.n_spills = 0
+        self._held: dict[int, tuple] = {}  # sid -> (ckpt, "host"|"disk")
+
+    def __contains__(self, sid: int) -> bool:
+        return sid in self._held
+
+    def __len__(self) -> int:
+        return len(self._held)
+
+    def put_all(self, items) -> None:
+        """Place every ``(sid, SessionCheckpoint)`` or raise without placing
+        any (host first, then spill) — the all-or-nothing half of a
+        multi-victim preemption."""
+        host_b, spill_b, placement = self.host_bytes, self.spill_bytes, []
+        for _, ckpt in items:
+            if host_b + ckpt.nbytes <= self.host_budget_bytes:
+                host_b += ckpt.nbytes
+                placement.append("host")
+            elif (self.spill_dir is not None
+                  and spill_b + ckpt.nbytes <= self.spill_budget_bytes):
+                spill_b += ckpt.nbytes
+                placement.append("disk")
+            else:
+                from repro.api.planner import BackpressureError
+
+                raise BackpressureError(
+                    f"checkpoint store full: {ckpt.nbytes} B snapshot over "
+                    f"host {self.host_bytes}/{self.host_budget_bytes} B and "
+                    f"spill {self.spill_bytes}/{self.spill_budget_bytes} B "
+                    f"({len(self._held)} checkpoint(s) parked) — close or "
+                    f"restore a preempted session first")
+        for (sid, ckpt), where in zip(items, placement):
+            if where == "disk":
+                os.makedirs(self.spill_dir, exist_ok=True)
+                ckpt.spill(os.path.join(self.spill_dir, f"ckpt-{sid}.npz"))
+                self.n_spills += 1
+            self._held[sid] = (ckpt, where)
+        self.host_bytes, self.spill_bytes = host_b, spill_b
+
+    def put(self, sid: int, ckpt) -> None:
+        self.put_all([(sid, ckpt)])
+
+    def take(self, sid: int):
+        """Remove and return ``sid``'s checkpoint (the restore half; loading
+        a spilled checkpoint's arrays is the checkpoint's own job)."""
+        ckpt, where = self._held.pop(sid)
+        if where == "host":
+            self.host_bytes -= ckpt.nbytes
+        else:
+            self.spill_bytes -= ckpt.nbytes
+        return ckpt
+
+    def drop(self, sid: int) -> None:
+        """Discard ``sid``'s checkpoint (cancelled session: the state is not
+        coming back; removes the spill file if it was on disk)."""
+        self.take(sid).discard()
 
 
 class StreamMultiplexer:
-    """Interleave block ingest across concurrent stream sessions.
+    """Interleave block ingest across concurrent stream sessions, with
+    fair-share scheduling, preemption, bounded backpressure, and deadlines.
 
-    Lifecycle per request: ``open(n_nodes) -> sid`` (admitted or queued per
-    the planner's budget; ``window=E`` opens a sliding-window session), any
-    number of ``feed(sid, edges)`` — and, for windowed sessions,
-    ``advance(sid)`` — in any interleaving with other sessions, then
-    ``close(sid) -> CountResult`` (idempotent; closing frees the session's
-    pinned state and admits queued requests FIFO). ``status(sid)`` is
-    ``"active"``/``"queued"``/``"closed"``.
+    Lifecycle per request: ``open(n_nodes, priority=, deadline_s=) -> sid``
+    (admitted, queued, or admitted-by-preempting lower-priority actives;
+    ``window=E`` opens a sliding-window session), any number of
+    ``feed(sid, edges)`` — and, for windowed sessions, ``advance(sid)`` — in
+    any interleaving with other sessions, then ``close(sid) -> CountResult``
+    (idempotent). ``status(sid)`` is ``"active"`` / ``"queued"`` /
+    ``"preempted"`` / ``"closed"``. ``preempt(sid)`` parks an active session
+    explicitly (checkpoint to the bounded store, device bytes freed,
+    transparent readmission later); ``next_sid()`` is the fair-share
+    scheduling hint for drivers choosing which active session to feed next.
+
+    Closing a session that never got admitted CANCELS it (buffers dropped,
+    ``CountResult`` with ``stats["cancelled"]``) instead of dead-ending;
+    closing a PREEMPTED session restores it first so the count is exact.
 
     All sessions run over one :class:`~repro.api.TriangleCounter` (one
     compile cache). ``block_size`` is the uniform default applied to every
     session (overridable per ``open``): uniform block shapes are what make S
-    concurrent sessions share a single ingest trace per ingest family
-    (unbounded and windowed sessions are distinct jits, one trace each).
-    ``bytes_in_use`` is the sum of the active sessions' pinned state —
-    n²/8(/S) each, ×E for windowed — the only thing admission charges
-    (edge blocks are transient)."""
+    concurrent sessions share a single ingest trace per ingest family.
+    ``bytes_in_use`` is the sum of the ACTIVE sessions' pinned state —
+    n²/8(/S) each, ×E for windowed — the only thing admission charges; every
+    host-side byte (waiting-feed buffers, parked checkpoints, spill files)
+    is bounded, and exhaustion raises
+    :class:`~repro.api.planner.BackpressureError`."""
 
     def __init__(self, counter=None, resources=None, *,
-                 block_size: int | None = None):
+                 block_size: int | None = None, policy: str = "fair",
+                 queue_budget_bytes: int | None = None,
+                 checkpoint_budget_bytes: int | None = None,
+                 spill_dir: str | None = None,
+                 spill_budget_bytes: int | None = None,
+                 clock=time.monotonic):
         from repro.api import TriangleCounter
 
+        if policy not in ("fair", "fifo"):
+            raise ValueError(f"policy must be 'fair' or 'fifo', got {policy!r}")
         self.counter = counter or TriangleCounter(resources)
         self.resources = resources or self.counter.resources
         self.block_size = block_size
-        self._active: dict[int, object] = {}       # sid -> StreamSession
-        self._queued: OrderedDict[int, _QueuedStream] = OrderedDict()
-        self._results: dict[int, object] = {}      # sid -> CountResult
-        self._state_bytes: dict[int, int] = {}     # sid -> pinned per-stage B
-        self.bytes_in_use = 0
-        self._next_sid = 0
+        self.policy = policy
+        self.queue_budget_bytes = (
+            queue_budget_bytes if queue_budget_bytes is not None
+            else self.resources.memory_bytes)
+        self.store = CheckpointStore(
+            checkpoint_budget_bytes if checkpoint_budget_bytes is not None
+            else self.resources.memory_bytes,
+            spill_dir=spill_dir, spill_budget_bytes=spill_budget_bytes)
+        self._clock = clock
+        self._recs: dict[int, _Session] = {}    # every non-closed session
+        self._results: dict[int, object] = {}   # sid -> CountResult
+        self.bytes_in_use = 0                   # device bytes pinned by actives
+        self.queue_bytes = 0                    # host bytes buffered by waiters
+        self.sched_stats = {"preemptions": 0, "restores": 0,
+                            "cancellations": 0, "expirations": 0}
+        self._next_id = 0
 
     # -- lifecycle ---------------------------------------------------------
     def open(self, n_nodes: int, *, block_size: int | None = None,
-             window: int | None = None) -> int:
+             window: int | None = None, priority: int = 0,
+             deadline_s: float | None = None) -> int:
         """Admit (or queue) one more stream; returns its session id.
 
-        ``window=E`` opens a sliding-window session: admission charges its
-        E·n²/8(/S) epoch-ring state instead of the unbounded n²/8(/S), so a
-        window that fits dense may only admit sharded, or queue. A stream
-        whose state can NEVER fit — queue verdict even against an idle
-        server — is rejected here with ``ValueError`` instead of being
-        queued forever (its feeds would buffer unboundedly waiting for
-        budget that will never free)."""
-        sid = self._next_sid
-        self._next_sid += 1
-        bs = block_size if block_size is not None else self.block_size
-        if not self._queued:  # FIFO: never admit around an earlier queued one
-            adm = self._admission(n_nodes, self.bytes_in_use, window)
+        ``window=E`` opens a sliding-window session (admission charges its
+        E·n²/8(/S) epoch-ring state). ``priority`` ranks the session for
+        fair-share scheduling (higher wins; equal priorities are FIFO): under
+        ``policy="fair"`` an open that would queue may instead PREEMPT
+        strictly-lower-priority actives when checkpointing them frees enough
+        device budget. ``deadline_s`` is an idle timeout — a session
+        untouched that long is reaped (active → parked checkpoint → cancel).
+        A stream whose state can NEVER fit — queue verdict even against an
+        idle server — is rejected with ``ValueError`` instead of queueing
+        forever."""
+        if (not isinstance(n_nodes, (int, np.integer))
+                or isinstance(n_nodes, bool) or n_nodes <= 0):
+            raise ValueError(f"n_nodes must be a positive int, got {n_nodes!r}")
+        if window is not None and (not isinstance(window, (int, np.integer))
+                                   or isinstance(window, bool) or window <= 0):
+            raise ValueError(
+                f"window must be a positive epoch count, got {window!r}")
+        if not isinstance(priority, (int, np.integer)) or isinstance(priority, bool):
+            raise ValueError(f"priority must be an int, got {priority!r}")
+        if deadline_s is not None and not deadline_s > 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s!r}")
+        self._reap()
+        # let live waiters claim any free budget (e.g. freed by an explicit
+        # preempt) before the fairness gate treats them as blocking
+        self._admit_pending()
+        sid = self._next_id
+        self._next_id += 1
+        rec = _Session(
+            sid=sid, n_nodes=int(n_nodes),
+            block_size=block_size if block_size is not None else self.block_size,
+            window=int(window) if window is not None else None,
+            priority=int(priority), deadline_s=deadline_s,
+            last_activity=self._clock())
+        # fairness gate: admit around the waiters only with strictly higher
+        # priority than every one of them (FIFO within a priority level;
+        # policy="fifo" never admits around any waiter). Parked sessions are
+        # deliberately benched — they don't block anyone.
+        blocking = any(
+            r.state != "active" and not r.parked
+            and (self.policy == "fifo" or r.priority >= rec.priority)
+            for r in self._recs.values())
+        if not blocking:
+            adm, victim_sids = self._admission(
+                rec.n_nodes, self.bytes_in_use, rec.window,
+                priority=rec.priority, preempt=self.policy == "fair")
             if adm.admitted:
-                self._admit(sid, n_nodes, bs, adm)
-                return sid
-        idle = self._admission(n_nodes, 0, window)
+                from repro.api.planner import BackpressureError
+
+                try:
+                    if victim_sids:
+                        self._preempt_many(victim_sids)
+                except BackpressureError:
+                    pass  # store full: can't park the victims — queue instead
+                else:
+                    self._recs[sid] = rec
+                    self._admit(rec, adm)
+                    return sid
+        idle, _ = self._admission(rec.n_nodes, 0, rec.window)
         if not idle.admitted:
             raise ValueError(
-                f"stream of {n_nodes} nodes can never be admitted on this "
-                f"server: {idle.reason}")
-        self._queued[sid] = _QueuedStream(n_nodes, bs, window, [])
+                f"stream of {rec.n_nodes} nodes can never be admitted on "
+                f"this server: {idle.reason}")
+        self._recs[sid] = rec
         return sid
 
     def feed(self, sid: int, edges) -> None:
         """Feed one (B, 2) edge array to session ``sid``: ingested through
         the shared cache if active (one trace per block shape across ALL
-        sessions of the same ingest family), buffered host-side if queued
-        (numpy, proportional to the edges fed while waiting)."""
-        if sid in self._active:
-            self._active[sid].feed(edges)
-        elif sid in self._queued:
-            self._queued[sid].blocks.append(
-                np.asarray(edges, dtype=np.int32).reshape(-1, 2))
-        elif sid in self._results:
-            raise RuntimeError(f"session {sid} already closed")
+        sessions of the same ingest family), buffered host-side if waiting
+        (queued or preempted) — against the BOUNDED ``queue_budget_bytes``,
+        raising ``BackpressureError`` past it. Edge arrays are validated at
+        this front door either way (shape (B, 2), integer dtype, ids in
+        ``[0, n_nodes)``)."""
+        rec = self._rec(sid)
+        if rec.state == "active":
+            rec.session.feed(edges)
+            rec.served_blocks += 1
         else:
-            raise KeyError(f"unknown session {sid}")
+            from repro.api.planner import BackpressureError
+            from repro.core import streaming
+
+            arr = streaming.validate_edges(edges, rec.n_nodes)
+            if self.queue_bytes + arr.nbytes > self.queue_budget_bytes:
+                raise BackpressureError(
+                    f"waiting-session feed budget exhausted: {arr.nbytes} B "
+                    f"over {self.queue_bytes}/{self.queue_budget_bytes} B "
+                    f"already buffered across "
+                    f"{self.n_queued + self.n_preempted} waiting session(s) "
+                    f"— close an active session (or raise "
+                    f"queue_budget_bytes)")
+            rec.blocks.append(arr)
+            rec.buffered_bytes += arr.nbytes
+            self.queue_bytes += arr.nbytes
+            rec.parked = False  # new activity: rejoin the readmission pool
+        rec.last_activity = self._clock()
 
     def advance(self, sid: int) -> None:
         """Slide session ``sid``'s window one epoch (windowed sessions only:
         flush the closing epoch's tail, then one epoch-slot clear — no
-        per-edge deletes, no new state, no retrace). A QUEUED windowed
+        per-edge deletes, no new state, no retrace). A WAITING windowed
         session records the boundary as a marker so its replay on admission
-        reproduces the exact epoch structure."""
-        if sid in self._active:
-            self._active[sid].advance()
-        elif sid in self._queued:
-            if not self._queued[sid].window:
+        (or restore) reproduces the exact epoch structure."""
+        rec = self._rec(sid)
+        if rec.state == "active":
+            rec.session.advance()
+        else:
+            if not rec.window:
                 raise RuntimeError(
                     "advance() is for windowed sessions — open with window=E")
-            self._queued[sid].blocks.append(_ADVANCE)
-        elif sid in self._results:
+            rec.blocks.append(_ADVANCE)
+            rec.parked = False  # new activity: rejoin the readmission pool
+        rec.last_activity = self._clock()
+
+    def preempt(self, sid: int) -> None:
+        """Park active session ``sid`` host-side NOW: checkpoint its bitset
+        state into the bounded store, free its pinned device bytes, and mark
+        it ``"preempted"`` — it readmits transparently (restore + replay of
+        anything fed meanwhile) once budget frees, and ``close`` on it
+        restores first so the count is exact. Raises ``BackpressureError``
+        if the store cannot hold the snapshot (the session stays active),
+        ``RuntimeError`` on a waiting/closed session (double-preempt
+        included), ``KeyError`` on an unknown sid."""
+        if sid in self._results:
             raise RuntimeError(f"session {sid} already closed")
-        else:
+        if sid not in self._recs:
             raise KeyError(f"unknown session {sid}")
+        rec = self._recs[sid]
+        if rec.state != "active":
+            raise RuntimeError(
+                f"session {sid} is {rec.state} — only an active session has "
+                f"device state to preempt")
+        self._preempt_many([sid])
+        # the freed bytes may admit another waiter right away; the parked
+        # session itself stays benched until new activity (or close) revives it
+        rec.parked = True
+        self._admit_pending()
 
     def close(self, sid: int):
         """Finalize ``sid`` and return its ``CountResult`` (idempotent).
 
-        Closing frees the session's pinned state bytes and admits queued
-        requests FIFO. Closing a session that is still QUEUED first retries
-        admission (it may fit now); if other sessions still pin the budget it
-        raises instead of overcommitting — close an active session first.
-        """
+        Closing frees the session's pinned state and admits waiters in
+        fair-share order. A still-QUEUED session first retries admission (it
+        may fit now); if it still cannot run, it is CANCELLED — host buffer
+        discarded, zero-count result with ``stats["cancelled"] = True`` —
+        instead of raising. A PREEMPTED session with nothing fed since its
+        checkpoint finalizes straight from the host snapshot (zero device
+        cost, still bit-exact — the snapshot covers every edge fed); one
+        with buffered feeds is restored first (preempting strictly-lower-
+        priority actives if that is what it takes), and if the device cannot
+        host that restore the close raises ``BackpressureError`` and the
+        session stays parked."""
         if sid in self._results:
             return self._results[sid]
-        if sid in self._queued:
-            self._admit_pending()
-            if sid in self._queued:
-                raise RuntimeError(
-                    f"session {sid} is still queued ({self.bytes_in_use} B "
-                    f"pinned by {len(self._active)} active session(s)) — "
-                    f"close an active session to free budget first")
-        if sid not in self._active:
+        if sid not in self._recs:
             raise KeyError(f"unknown session {sid}")
-        session = self._active.pop(sid)
-        result = session.finalize()
-        self.bytes_in_use -= self._state_bytes.pop(sid)
-        self._results[sid] = result
+        self._reap()
+        if sid in self._results:  # the reap just expired it
+            return self._results[sid]
+        rec = self._recs[sid]
+        if rec.state != "active":
+            self._admit_pending()
+        if rec.state == "preempted" and not rec.blocks:
+            # nothing fed since the checkpoint: the count is already in the
+            # host snapshot — finalize without touching the device
+            result = self.store.take(sid).finalize_result()
+            result.stats["priority"] = rec.priority
+            result.stats["preempts"] = rec.n_preempts
+            result.stats["restored"] = False
+            del self._recs[sid]
+            self._results[sid] = result
+            self._admit_pending()
+            return result
+        if rec.state == "preempted":
+            self._force_restore(rec)
+        if rec.state == "queued":
+            self.sched_stats["cancellations"] += 1
+            result = self._cancel(rec)
+        else:
+            session = rec.session
+            result = session.finalize()
+            self.bytes_in_use -= rec.state_bytes
+            result.stats["priority"] = rec.priority
+            result.stats["preempts"] = rec.n_preempts
+            result.stats["restored"] = session.restored
+            del self._recs[sid]
+            self._results[sid] = result
         self._admit_pending()
         return result
 
     def status(self, sid: int) -> str:
-        """``"active"`` (state pinned on device, feeds ingest),
-        ``"queued"`` (host-side buffer only, no device state), or
-        ``"closed"`` (result cached, state freed)."""
-        if sid in self._active:
-            return "active"
-        if sid in self._queued:
-            return "queued"
+        """``"active"`` (state pinned on device, feeds ingest), ``"queued"``
+        (host-side buffer only, never admitted), ``"preempted"`` (state
+        parked in the checkpoint store, feeds buffer), or ``"closed"``
+        (result cached, state freed)."""
         if sid in self._results:
             return "closed"
-        raise KeyError(f"unknown session {sid}")
+        if sid not in self._recs:
+            raise KeyError(f"unknown session {sid}")
+        return self._recs[sid].state
+
+    def next_sid(self, candidates=None) -> int | None:
+        """The scheduler's pick of which ACTIVE session a driver should feed
+        next (``None`` if none are active). ``policy="fair"``: highest
+        priority first, then fewest blocks served (fair share within a
+        level), then arrival. ``policy="fifo"``: earliest arrival. Drivers
+        like the serve bench loop on ``next_sid`` to let the policy — not
+        the request order — shape time-to-first-count."""
+        pool = [r for r in self._recs.values() if r.state == "active"
+                and (candidates is None or r.sid in candidates)]
+        if not pool:
+            return None
+        if self.policy == "fair":
+            return min(pool,
+                       key=lambda r: (-r.priority, r.served_blocks, r.sid)).sid
+        return min(pool, key=lambda r: r.sid).sid
+
+    def reap(self) -> None:
+        """Apply deadline expiry now (also runs inside ``open``/``close``):
+        an idle-past-deadline ACTIVE session is checkpointed off the device
+        (cancelled outright if the store is full); an idle WAITING session is
+        cancelled, its buffers and any parked checkpoint discarded."""
+        self._reap()
 
     @property
     def n_active(self) -> int:
-        return len(self._active)
+        return sum(r.state == "active" for r in self._recs.values())
 
     @property
     def n_queued(self) -> int:
-        return len(self._queued)
+        return sum(r.state == "queued" for r in self._recs.values())
+
+    @property
+    def n_preempted(self) -> int:
+        return sum(r.state == "preempted" for r in self._recs.values())
 
     # -- internals ---------------------------------------------------------
+    def _rec(self, sid: int) -> _Session:
+        if sid in self._recs:
+            return self._recs[sid]
+        if sid in self._results:
+            raise RuntimeError(f"session {sid} already closed")
+        raise KeyError(f"unknown session {sid}")
+
     def _admission(self, n_nodes: int, bytes_in_use: int,
-                   window: int | None = None):
+                   window: int | None, *, priority: int = 0,
+                   preempt: bool = False):
         """Mesh-aware admission: the planner's n²/8/S-per-stage accounting
         (×E for windowed sessions) only holds when the counter's mesh
-        actually hosts the stage axis. Host-EMULATED sharding materializes
-        all S shards on the one real device, so without a matching mesh the
-        decision is re-taken at ring width 1 — the full (epoch-ring) bitset
-        must fit, or the request queues."""
+        actually hosts the stage axis; without a matching mesh the decision
+        is re-taken at ring width 1. With ``preempt`` the planner also sees
+        the active sessions' ``(state_bytes, priority)`` and may return a
+        ``"preempt"`` verdict; returns ``(Admission, victim_sids)``."""
         from repro.api.planner import admit_session
 
+        active = ([r for r in self._recs.values() if r.state == "active"]
+                  if preempt else [])
+        actives = [(r.state_bytes, r.priority) for r in active] or None
         adm = admit_session(n_nodes, self.resources, bytes_in_use=bytes_in_use,
-                            window_epochs=window or 0)
+                            window_epochs=window or 0, priority=priority,
+                            actives=actives)
         if (adm.admitted and adm.plan.n_stages > 1
                 and not self.counter._mesh_matches(adm.plan.n_stages)):
             adm = admit_session(
                 n_nodes, dataclasses.replace(self.resources, max_stages=1),
-                bytes_in_use=bytes_in_use, window_epochs=window or 0)
-        return adm
+                bytes_in_use=bytes_in_use, window_epochs=window or 0,
+                priority=priority, actives=actives)
+        return adm, [active[i].sid for i in adm.victims]
 
-    def _admit(self, sid: int, n_nodes: int, block_size: int | None, adm) -> None:
+    def _admit(self, rec: _Session, adm) -> None:
         # adm.plan carries window_epochs, so a windowed admission opens a
         # windowed session without re-stating the window here
-        self._active[sid] = self.counter.open_stream(
-            n_nodes, plan=adm.plan, block_size=block_size)
-        self._state_bytes[sid] = adm.state_bytes
+        rec.session = self.counter.open_stream(
+            rec.n_nodes, plan=adm.plan, block_size=rec.block_size)
+        rec.state = "active"
+        rec.state_bytes = adm.state_bytes
         self.bytes_in_use += adm.state_bytes
+        rec.last_activity = self._clock()
+        self._replay(rec)
+
+    def _replay(self, rec: _Session) -> None:
+        """Replay a waiter's host-buffered blocks (and epoch markers as
+        ``advance()``) into its now-live session — bit-identical to a
+        session that was never made to wait."""
+        blocks, rec.blocks = rec.blocks, []
+        self.queue_bytes -= rec.buffered_bytes
+        rec.buffered_bytes = 0
+        for b in blocks:
+            if isinstance(b, str):  # _ADVANCE epoch marker
+                rec.session.advance()
+            else:
+                rec.session.feed(b)
+
+    def _preempt_many(self, sids: list) -> None:
+        """Checkpoint every session in ``sids`` into the store — all or
+        nothing (``put_all``): checkpointing is non-destructive, so a
+        ``BackpressureError`` from a full store leaves every victim still
+        active and the device accounting untouched."""
+        items = [(v, self._recs[v].session.checkpoint()) for v in sids]
+        self.store.put_all(items)
+        for v in sids:
+            r = self._recs[v]
+            r.session = None
+            r.state = "preempted"
+            self.bytes_in_use -= r.state_bytes
+            r.n_preempts += 1
+            r.last_activity = self._clock()
+            self.sched_stats["preemptions"] += 1
+
+    def _restore_from(self, rec: _Session, ckpt) -> None:
+        rec.session = self.counter.restore_stream(ckpt)
+        rec.state = "active"
+        rec.state_bytes = rec.session.state_bytes
+        self.bytes_in_use += rec.state_bytes
+        rec.last_activity = self._clock()
+        self.sched_stats["restores"] += 1
+        self._replay(rec)
+
+    def _force_restore(self, rec: _Session) -> None:
+        """Restore a preempted session for ``close``: its own checkpoint is
+        taken OUT of the store first (freeing store room for any victims),
+        then strictly-lower-priority actives are preempted if the device
+        budget needs them. On failure the checkpoint goes back and the
+        ``BackpressureError`` propagates — the close did not happen."""
+        from repro.api.planner import BackpressureError
+
+        victims = self._victims_for(rec.state_bytes, rec.priority)
+        if victims is None:
+            raise BackpressureError(
+                f"cannot restore preempted session {rec.sid} to close it: "
+                f"{rec.state_bytes} B needed, "
+                f"{self.resources.memory_bytes - self.bytes_in_use} B free "
+                f"and no strictly-lower-priority active to preempt — close "
+                f"an active session first")
+        ckpt = self.store.take(rec.sid)
+        try:
+            if victims:
+                self._preempt_many(victims)
+        except BackpressureError:
+            self.store.put(rec.sid, ckpt)  # same budget it fit a moment ago
+            raise
+        self._restore_from(rec, ckpt)
+
+    def _victims_for(self, needed: int, priority: int):
+        """The minimal strictly-lower-priority victim set (lowest priority
+        first, then largest state) whose preemption frees ``needed`` device
+        bytes — ``[]`` if it already fits, ``None`` if no set can (or the
+        policy forbids preemption)."""
+        remaining = self.resources.memory_bytes - self.bytes_in_use
+        if needed <= remaining:
+            return []
+        if self.policy != "fair":
+            return None
+        eligible = sorted(
+            (r for r in self._recs.values()
+             if r.state == "active" and r.priority < priority),
+            key=lambda r: (r.priority, -r.state_bytes, r.sid))
+        freed, victims = 0, []
+        for r in eligible:
+            freed += r.state_bytes
+            victims.append(r.sid)
+            if needed <= remaining + freed:
+                return victims
+        return None
 
     def _admit_pending(self) -> None:
-        """Admit queued requests FIFO while the freed budget allows,
-        replaying each one's host-buffered blocks (and, for windowed
-        sessions, its buffered epoch markers as ``advance()`` calls — the
-        replayed session is bit-identical to one admitted immediately)."""
-        while self._queued:
-            sid, q = next(iter(self._queued.items()))
-            adm = self._admission(q.n_nodes, self.bytes_in_use, q.window)
-            if not adm.admitted:
+        """Admit waiters head-of-line in fair-share order — priority
+        descending, FIFO within a level (plain FIFO under ``policy="fifo"``)
+        — restoring preempted ones and replaying every waiter's buffered
+        blocks. Stops at the first waiter that cannot run (no skipping: a
+        big waiter is never starved by small ones admitted around it), which
+        keeps all-equal-priority workloads exactly the old FIFO. PARKED
+        sessions (explicit preempt, deadline reap) sit the sweep out until
+        activity revives them."""
+        from repro.api.planner import BackpressureError
+
+        while True:
+            waiters = [r for r in self._recs.values()
+                       if r.state != "active" and not r.parked]
+            if not waiters:
                 return
-            del self._queued[sid]
-            self._admit(sid, q.n_nodes, q.block_size, adm)
-            for b in q.blocks:
-                if isinstance(b, str):  # _ADVANCE epoch marker
-                    self._active[sid].advance()
-                else:
-                    self._active[sid].feed(b)
+            if self.policy == "fair":
+                rec = min(waiters, key=lambda r: (-r.priority, r.sid))
+            else:
+                rec = min(waiters, key=lambda r: r.sid)
+            if rec.state == "preempted":
+                victims = self._victims_for(rec.state_bytes, rec.priority)
+                if victims is None:
+                    return
+                ckpt = self.store.take(rec.sid)
+                try:
+                    if victims:
+                        self._preempt_many(victims)
+                except BackpressureError:
+                    self.store.put(rec.sid, ckpt)
+                    return
+                self._restore_from(rec, ckpt)
+            else:
+                adm, victim_sids = self._admission(
+                    rec.n_nodes, self.bytes_in_use, rec.window,
+                    priority=rec.priority, preempt=self.policy == "fair")
+                if not adm.admitted:
+                    return
+                try:
+                    if victim_sids:
+                        self._preempt_many(victim_sids)
+                except BackpressureError:
+                    return
+                self._admit(rec, adm)
+
+    def _reap(self) -> None:
+        """Expire sessions idle past their ``deadline_s``: active → parked
+        checkpoint (cancel if the store will not take it); waiting →
+        cancelled, buffers and parked checkpoint discarded. Parking resets
+        the idle clock, so an abandoned active stream decays in two steps —
+        device bytes freed first, host bytes one deadline later."""
+        from repro.api.planner import BackpressureError
+
+        now = self._clock()
+        freed = False
+        for rec in list(self._recs.values()):
+            if rec.deadline_s is None or now - rec.last_activity <= rec.deadline_s:
+                continue
+            if rec.state == "active":
+                try:
+                    self._preempt_many([rec.sid])
+                    rec.parked = True
+                    freed = True
+                    continue
+                except BackpressureError:
+                    self.bytes_in_use -= rec.state_bytes
+                    rec.session = None
+            elif rec.state == "preempted":
+                self.store.drop(rec.sid)
+            self.sched_stats["expirations"] += 1
+            self._cancel(rec, expired=True)
+            freed = True
+        if freed:
+            self._admit_pending()
+
+    def _cancel(self, rec: _Session, *, expired: bool = False):
+        """Drop a session that will never produce a real count: discard its
+        host buffers and cache a zero-count ``CountResult`` flagged
+        ``cancelled`` (and ``expired`` when a deadline reaped it)."""
+        from repro.api import CountResult
+
+        self.queue_bytes -= rec.buffered_bytes
+        result = CountResult(
+            count=jnp.zeros((), count_dtype()), plan=None, wall_s=0.0,
+            stats={"session": True, "cancelled": True, "expired": expired,
+                   "priority": rec.priority, "preempts": rec.n_preempts,
+                   "buffered_bytes_dropped": rec.buffered_bytes})
+        del self._recs[rec.sid]
+        self._results[rec.sid] = result
+        return result

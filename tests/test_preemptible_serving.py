@@ -1,0 +1,577 @@
+"""Preemptible serving: session checkpoint/restore, fair-share scheduling
+with spill, bounded backpressure, deadlines, and the lifecycle error paths.
+
+The acceptance pins for the preemption PR live here:
+
+- checkpoint/restore differential — a session preempted and restored
+  mid-stream (including mid-window) finalizes BIT-IDENTICALLY to the
+  uninterrupted oracle on dense, emulated-sharded, and mesh (8 forced host
+  devices) states, with no retrace on restore for already-traced shapes
+  (`test_randomized_preempt_restore_differential`,
+  `test_checkpoint_restore_on_eight_devices_subprocess`).
+- bounded degradation — feeding past the queue/checkpoint byte budgets
+  raises `BackpressureError`, never unbounded host buffering
+  (`test_waiting_feed_budget_backpressure`,
+  `test_checkpoint_store_budget_backpressure`).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    BackpressureError,
+    Plan,
+    Resources,
+    SessionCheckpoint,
+    TriangleCounter,
+)
+from repro.core import streaming
+from repro.core.triangle_ref import count_triangles_brute
+from repro.graphs import generators as gen
+from repro.serve import CheckpointStore, StreamMultiplexer
+
+# Two 256-node dense sessions (8 KB bitset each) fit; a third does not.
+RES2 = Resources(memory_bytes=20480)
+
+
+def _edges(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2), dtype=np.int32)
+    return e[e[:, 0] != e[:, 1]]
+
+
+# --------------------------------------------------------------------------
+# Checkpoint / restore bit-identity (the tentpole differential)
+# --------------------------------------------------------------------------
+def _run_schedule(counter, n, ops, *, plan=None, window=None, ckpt_at=()):
+    """Run a (kind, payload) op schedule through one stream session,
+    checkpoint+restore at the op indices in ``ckpt_at``; return the result."""
+    s = counter.open_stream(n, plan=plan, window=window)
+    for i, (kind, payload) in enumerate(ops):
+        if i in ckpt_at:
+            s = counter.restore_stream(s.checkpoint())
+        if kind == "feed":
+            s.feed(payload)
+        else:
+            s.advance()
+    return s.finalize()
+
+
+def _random_ops(n, m, seed, *, windowed=False):
+    rng = np.random.default_rng(seed)
+    e = _edges(n, m, seed)
+    ops, pos = [], 0
+    while pos < len(e):
+        step = int(rng.integers(1, 40))
+        ops.append(("feed", e[pos:pos + step]))
+        pos += step
+        if windowed and rng.random() < 0.25:
+            ops.append(("advance", None))
+    return ops
+
+
+@pytest.mark.parametrize("mode", ["dense", "sharded", "windowed"])
+def test_randomized_preempt_restore_differential(mode):
+    """Random feed schedules, random checkpoint/restore points: the restored
+    run must be bit-identical (value AND dtype) to the uninterrupted oracle
+    — dense, host-emulated sharded, and mid-window included."""
+    plan = (Plan(method="stream", n_stages=3, block_size=32)
+            if mode == "sharded" else None)
+    window = 3 if mode == "windowed" else None
+    n = 96
+    counter = TriangleCounter()
+    for seed in range(3):
+        ops = _random_ops(n, 400, 100 + seed, windowed=mode == "windowed")
+        rng = np.random.default_rng(1000 + seed)
+        ckpt_at = {int(i) for i in
+                   rng.integers(0, len(ops), size=max(1, len(ops) // 4))}
+        oracle = _run_schedule(counter, n, ops, plan=plan, window=window)
+        got = _run_schedule(counter, n, ops, plan=plan, window=window,
+                            ckpt_at=ckpt_at)
+        assert np.asarray(got.count) == np.asarray(oracle.count)
+        assert np.asarray(got.count).dtype == np.asarray(oracle.count).dtype
+
+
+def test_restore_traces_nothing_for_seen_shapes():
+    """Restore must reuse the original session's compile-cache entry: same
+    cache key, sticky tail shapes — zero new ingest traces."""
+    counter = TriangleCounter()
+    s = counter.open_stream(64, block_size=32)
+    s.feed(_edges(64, 200, 1))
+    before = streaming.ingest_trace_count()
+    s2 = counter.restore_stream(s.checkpoint())
+    s2.feed(_edges(64, 200, 2))
+    s2.finalize()
+    assert streaming.ingest_trace_count() - before == 0
+
+
+def test_checkpoint_counts_every_edge_fed_so_far():
+    """The snapshot boundary is 'every edge fed': the buffered tail is
+    flushed into the state before the copy, so discarding the live session
+    right after checkpoint loses nothing."""
+    g = gen.gnp(48, 0.5, seed=3)
+    counter = TriangleCounter()
+    s = counter.open_stream(48, block_size=64)
+    s.feed(g.edges)           # n_edges % 64 != 0: a tail is surely buffered
+    ck = s.checkpoint()
+    del s
+    r = counter.restore_stream(ck).finalize()
+    assert r.item() == count_triangles_brute(g)
+
+
+def test_checkpoint_after_finalize_raises():
+    s = TriangleCounter().open_stream(32)
+    s.finalize()
+    with pytest.raises(RuntimeError, match="finalized"):
+        s.checkpoint()
+
+
+def test_spill_roundtrip_and_from_file(tmp_path):
+    """Spill to .npz, rehydrate via from_file (the migration entry point):
+    still bit-identical, and load cleans the spill file up."""
+    e = _edges(64, 300, 7)
+    counter = TriangleCounter()
+    s = counter.open_stream(64, window=2)
+    s.feed(e[:150])
+    s.advance()
+    s.feed(e[150:200])
+    ck = s.checkpoint()
+    path = str(tmp_path / "ck.npz")
+    ck.spill(path)
+    assert ck.spilled and os.path.exists(path)
+    ck.spill(path)  # idempotent
+    ck2 = SessionCheckpoint.from_file(path)
+    assert ck2.n_epochs_advanced == 1 and not ck2.spilled
+    s2 = counter.restore_stream(ck2)
+    s2.feed(e[200:])
+    got = s2.finalize()
+    oracle = TriangleCounter().count_windowed(
+        64, [[e[:150]], [e[150:]]], window=2)
+    assert np.asarray(got.count) == np.asarray(oracle.count)
+    # the original (still-spilled) checkpoint loads and deletes its file
+    counter.restore_stream(ck)
+    assert not os.path.exists(path)
+
+
+# --------------------------------------------------------------------------
+# Front-door input validation
+# --------------------------------------------------------------------------
+def test_feed_rejects_bad_edges_at_session_front_door():
+    s = TriangleCounter().open_stream(32)
+    with pytest.raises(ValueError, match="integer"):
+        s.feed(np.array([[1.5, 2.0]]))
+    with pytest.raises(ValueError, match=r"\(B, 2\)"):
+        s.feed(np.array([1, 2, 3], dtype=np.int32))
+    with pytest.raises(ValueError, match=r"\[0, 32\)"):
+        s.feed(np.array([[0, 32]], dtype=np.int32))
+    with pytest.raises(ValueError, match=r"\[0, 32\)"):
+        s.feed(np.array([[-1, 3]], dtype=np.int32))
+    s.feed(np.empty((0, 2), dtype=np.int32))  # empty feed is a no-op
+    s.feed([])                                # so is an empty list
+    assert s.finalize().item() == 0
+
+
+def test_mux_feed_validates_waiting_sessions_too():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    a, b = mux.open(256), mux.open(256)
+    waiting = mux.open(256)
+    with pytest.raises(ValueError, match=r"\[0, 256\)"):
+        mux.feed(waiting, np.array([[0, 400]], dtype=np.int32))
+    with pytest.raises(ValueError, match="integer"):
+        mux.feed(waiting, np.array([[0.5, 1.0]]))
+    for sid in (a, b, waiting):
+        mux.close(sid)
+
+
+def test_mux_open_validates_arguments():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    with pytest.raises(ValueError, match="n_nodes"):
+        mux.open(0)
+    with pytest.raises(ValueError, match="n_nodes"):
+        mux.open(-5)
+    with pytest.raises(ValueError, match="window"):
+        mux.open(64, window=0)
+    with pytest.raises(ValueError, match="priority"):
+        mux.open(64, priority=1.5)
+    with pytest.raises(ValueError, match="deadline_s"):
+        mux.open(64, deadline_s=0)
+    with pytest.raises(ValueError, match="policy"):
+        StreamMultiplexer(TriangleCounter(RES2), policy="lifo")
+
+
+# --------------------------------------------------------------------------
+# Fair-share scheduling and preemption
+# --------------------------------------------------------------------------
+def test_priority_open_preempts_lowest_priority_active():
+    g = [gen.gnp(256, 0.02, seed=s) for s in range(3)]
+    counter = TriangleCounter(RES2)
+    mux = StreamMultiplexer(counter, block_size=64)
+    lo = mux.open(256, priority=0)
+    mid = mux.open(256, priority=1)
+    mux.feed(lo, g[0].edges)
+    mux.feed(mid, g[1].edges)
+    hi = mux.open(256, priority=5)       # full budget -> preempt the prio-0
+    assert mux.status(hi) == "active"
+    assert mux.status(lo) == "preempted" and mux.status(mid) == "active"
+    assert len(mux.store) == 1 and mux.sched_stats["preemptions"] == 1
+    assert mux.bytes_in_use == 2 * 8192  # victim's bytes freed, hi's pinned
+    mux.feed(lo, g[0].edges[:32])        # buffers host-side while parked
+    mux.feed(hi, g[2].edges)
+    r_hi = mux.close(hi)                 # frees budget -> lo readmits+replays
+    assert mux.status(lo) == "active" and mux.sched_stats["restores"] == 1
+    r_lo, r_mid = mux.close(lo), mux.close(mid)
+    assert r_hi.item() == count_triangles_brute(g[2])
+    assert r_mid.item() == count_triangles_brute(g[1])
+    # lo saw its full stream (pre-preemption edges + the buffered repeat)
+    oracle = counter.count_stream(256, [g[0].edges, g[0].edges[:32]],
+                                  block_size=64)
+    assert np.asarray(r_lo.count) == np.asarray(oracle.count)
+    assert r_lo.stats["restored"] and r_lo.stats["preempts"] == 1
+
+
+def test_equal_priority_never_preempts():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    a, b = mux.open(256, priority=3), mux.open(256, priority=3)
+    c = mux.open(256, priority=3)        # equal priority: queue, no thrash
+    assert mux.status(c) == "queued"
+    assert mux.sched_stats["preemptions"] == 0 and len(mux.store) == 0
+    for sid in (a, b, c):
+        mux.close(sid)
+
+
+def test_fifo_policy_ignores_priority():
+    mux = StreamMultiplexer(TriangleCounter(RES2), policy="fifo")
+    a, b = mux.open(256), mux.open(256)
+    hi = mux.open(256, priority=99)
+    assert mux.status(hi) == "queued"    # no jump, no preemption under FIFO
+    assert mux.sched_stats["preemptions"] == 0
+    mux.close(a)
+    assert mux.status(hi) == "active"
+    mux.close(b), mux.close(hi)
+
+
+def test_explicit_preempt_and_errors():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    a = mux.open(256)
+    e = _edges(256, 100, 4)
+    mux.feed(a, e)
+    mux.preempt(a)
+    assert mux.status(a) == "preempted" and mux.bytes_in_use == 0
+    with pytest.raises(RuntimeError, match="preempted"):
+        mux.preempt(a)                   # double-preempt
+    mux.feed(a, e[:10])                  # buffers host-side while parked
+    b = mux.open(256)                    # next scheduling event: a readmits
+    assert mux.status(a) == "active" and mux.status(b) == "active"
+    q = mux.open(256)                    # budget full again -> queued
+    assert mux.status(q) == "queued"
+    with pytest.raises(RuntimeError, match="queued"):
+        mux.preempt(q)                   # nothing on device to preempt
+    with pytest.raises(KeyError, match="unknown"):
+        mux.preempt(999)
+    r = mux.close(a)
+    oracle = TriangleCounter().count_stream(256, [e, e[:10]])
+    assert np.asarray(r.count) == np.asarray(oracle.count)
+    mux.close(b), mux.close(q)
+    with pytest.raises(RuntimeError, match="closed"):
+        mux.preempt(a)
+
+
+def test_close_preempted_finalizes_from_snapshot_without_device():
+    """close() on a preempted session nobody fed since its checkpoint reads
+    the count straight out of the host snapshot — no restore, no device
+    bytes, still the exact count."""
+    g = gen.gnp(256, 0.03, seed=5)
+    mux = StreamMultiplexer(TriangleCounter(RES2), block_size=64)
+    a = mux.open(256, priority=1)
+    b = mux.open(256, priority=1)
+    mux.feed(a, g.edges)
+    hi = mux.open(256, priority=5)       # preempts a (b stays: same bytes)
+    assert mux.status(a) == "preempted"
+    r = mux.close(a)                     # device still full: snapshot close
+    assert r.item() == count_triangles_brute(g)
+    assert r.stats["from_checkpoint"] and not r.stats["restored"]
+    assert mux.bytes_in_use == 2 * 8192  # b and hi untouched
+    mux.close(b), mux.close(hi)
+
+
+def test_close_preempted_with_pending_feeds_restores_or_backpressures():
+    """A preempted session fed AFTER its checkpoint must restore to finalize;
+    when nothing strictly-lower-priority can be evicted to make room, close
+    raises BackpressureError and the session stays parked."""
+    g = gen.gnp(256, 0.03, seed=6)
+    mux = StreamMultiplexer(TriangleCounter(RES2), block_size=64)
+    a = mux.open(256, priority=1)
+    b = mux.open(256, priority=1)
+    mux.feed(a, g.edges[:100])
+    hi = mux.open(256, priority=5)       # preempts a
+    assert mux.status(a) == "preempted"
+    mux.feed(a, g.edges[100:])           # pending: snapshot close impossible
+    with pytest.raises(BackpressureError, match="restore"):
+        mux.close(a)                     # b and hi outrank/equal a: no room
+    assert mux.status(a) == "preempted"  # close did not happen
+    mux.close(hi)
+    assert mux.status(a) == "active"     # freed budget readmitted + replayed
+    r = mux.close(a)
+    assert r.item() == count_triangles_brute(g)
+    assert r.stats["restored"]
+    mux.close(b)
+
+
+def test_next_sid_fair_share_ordering():
+    res = Resources(memory_bytes=65536)
+    mux = StreamMultiplexer(TriangleCounter(res))
+    s0, s1 = mux.open(128), mux.open(128)
+    s2 = mux.open(128, priority=2)
+    assert mux.next_sid() == s2          # highest priority first
+    e = _edges(128, 8, 6)
+    mux.feed(s0, e)
+    assert mux.next_sid(candidates={s0, s1}) == s1  # fewest served wins
+    mux.feed(s1, e)
+    assert mux.next_sid(candidates={s0, s1}) == s0  # then arrival order
+    fifo = StreamMultiplexer(TriangleCounter(res), policy="fifo")
+    f0, f1 = fifo.open(128), fifo.open(128, priority=9)
+    assert fifo.next_sid() == f0         # FIFO: arrival, not priority
+    for m, sids in ((mux, (s0, s1, s2)), (fifo, (f0, f1))):
+        for sid in sids:
+            m.close(sid)
+    assert mux.next_sid() is None
+
+
+# --------------------------------------------------------------------------
+# Queued-close cancellation and lifecycle error paths
+# --------------------------------------------------------------------------
+def test_queued_close_cancels_gracefully_and_stays_idempotent():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    a, b = mux.open(256), mux.open(256)
+    q = mux.open(256)
+    mux.feed(q, _edges(256, 50, 8))      # buffered host-side
+    assert mux.queue_bytes > 0
+    r = mux.close(q)                     # actives pin the budget -> cancel
+    assert r.stats["cancelled"] and r.item() == 0 and r.plan is None
+    assert mux.status(q) == "closed" and mux.queue_bytes == 0
+    assert mux.close(q) is r             # idempotent
+    assert mux.sched_stats["cancellations"] == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        mux.feed(q, _edges(256, 4, 9))
+    with pytest.raises(RuntimeError, match="closed"):
+        mux.advance(q)
+    mux.close(a), mux.close(b)
+
+
+def test_lifecycle_error_paths():
+    mux = StreamMultiplexer(TriangleCounter(RES2))
+    a = mux.open(256)                    # unbounded, active
+    with pytest.raises(RuntimeError, match="windowed"):
+        mux.advance(a)                   # advance() on a non-windowed active
+    b, q = mux.open(256), mux.open(256)  # q queued, unbounded
+    with pytest.raises(RuntimeError, match="windowed"):
+        mux.advance(q)                   # ...and on a non-windowed waiter
+    with pytest.raises(KeyError, match="unknown"):
+        mux.feed(999, _edges(256, 2, 1))
+    for op in (mux.advance, mux.close, mux.status):
+        with pytest.raises(KeyError, match="unknown"):
+            op(999)
+    for sid in (a, b, q):
+        mux.close(sid)
+
+
+# --------------------------------------------------------------------------
+# Bounded backpressure (queue budget, checkpoint store, spill)
+# --------------------------------------------------------------------------
+def test_waiting_feed_budget_backpressure():
+    mux = StreamMultiplexer(TriangleCounter(RES2), queue_budget_bytes=256)
+    a, b = mux.open(256), mux.open(256)
+    q = mux.open(256)
+    mux.feed(q, _edges(256, 20, 11))     # ~160 B buffered: fits
+    with pytest.raises(BackpressureError, match="budget"):
+        mux.feed(q, _edges(256, 20, 12))  # would cross 256 B: refused
+    mux.feed(q, _edges(256, 5, 13))      # smaller feed still fits
+    r_a = mux.close(a)                   # frees budget -> q admits + replays
+    assert mux.status(q) == "active" and mux.queue_bytes == 0
+    mux.feed(q, _edges(256, 500, 14))    # active feeds are NOT queue-charged
+    for sid in (b, q):
+        mux.close(sid)
+    assert r_a.item() == 0
+
+
+def test_checkpoint_store_budget_backpressure():
+    """An explicit preempt against a full store fails closed: typed error,
+    session still active, device accounting untouched."""
+    mux = StreamMultiplexer(TriangleCounter(RES2), checkpoint_budget_bytes=64)
+    a = mux.open(256)
+    with pytest.raises(BackpressureError, match="checkpoint store"):
+        mux.preempt(a)
+    assert mux.status(a) == "active" and mux.bytes_in_use == 8192
+    assert len(mux.store) == 0 and mux.sched_stats["preemptions"] == 0
+    mux.close(a)
+
+
+def test_priority_open_queues_when_store_cannot_hold_victims():
+    """A preempting open degrades to queue when the victims' checkpoints
+    don't fit the store — never a half-committed preemption."""
+    mux = StreamMultiplexer(TriangleCounter(RES2), checkpoint_budget_bytes=64)
+    a, b = mux.open(256), mux.open(256)
+    hi = mux.open(256, priority=5)
+    assert mux.status(hi) == "queued"
+    assert mux.status(a) == "active" and mux.status(b) == "active"
+    assert len(mux.store) == 0
+    for sid in (a, b, hi):
+        mux.close(sid)
+
+
+def test_checkpoint_store_spills_to_disk(tmp_path):
+    """Past the host budget, checkpoints spill to .npz under spill_dir; the
+    spilled session restores bit-identically and cleans its file up."""
+    g0, g1 = (gen.gnp(256, 0.03, seed=s) for s in (20, 21))
+    store_dir = str(tmp_path / "spill")
+    # host budget fits ONE ~8 KB snapshot; the second must spill
+    mux = StreamMultiplexer(TriangleCounter(RES2), block_size=64,
+                            checkpoint_budget_bytes=10_000,
+                            spill_dir=store_dir)
+    a, b = mux.open(256), mux.open(256)
+    mux.feed(a, g0.edges)
+    mux.feed(b, g1.edges)
+    mux.preempt(a)
+    mux.preempt(b)                       # host full -> disk
+    assert mux.store.n_spills == 1 and mux.store.spill_bytes > 0
+    assert len(os.listdir(store_dir)) == 1
+    r_a = mux.close(a)                   # budget free: restore (host copy)
+    r_b = mux.close(b)                   # restore from disk
+    assert r_a.item() == count_triangles_brute(g0)
+    assert r_b.item() == count_triangles_brute(g1)
+    assert os.listdir(store_dir) == []   # spill file consumed
+    assert mux.store.host_bytes == 0 and mux.store.spill_bytes == 0
+    # no spill_dir: the overflow checkpoint is refused instead
+    mux2 = StreamMultiplexer(TriangleCounter(RES2),
+                             checkpoint_budget_bytes=10_000)
+    c, d = mux2.open(256), mux2.open(256)
+    mux2.preempt(c)
+    with pytest.raises(BackpressureError, match="spill"):
+        mux2.preempt(d)
+    mux2.close(c), mux2.close(d)
+
+
+# --------------------------------------------------------------------------
+# Deadlines: abandoned sessions decay active -> parked -> cancelled
+# --------------------------------------------------------------------------
+def test_deadline_reaps_idle_sessions_in_two_steps():
+    now = [0.0]
+    g = gen.gnp(256, 0.03, seed=30)
+    mux = StreamMultiplexer(TriangleCounter(RES2), block_size=64,
+                            clock=lambda: now[0])
+    a = mux.open(256, deadline_s=10)
+    keep = mux.open(256)                 # no deadline: never reaped
+    mux.feed(a, g.edges)
+    now[0] = 5.0
+    mux.reap()
+    assert mux.status(a) == "active"     # within deadline
+    now[0] = 16.0
+    mux.reap()                           # idle 16 s > 10 s: park it
+    assert mux.status(a) == "preempted" and mux.bytes_in_use == 8192
+    # a late close still recovers the exact count from the parked state
+    assert mux.close(a).item() == count_triangles_brute(g)
+    # a second abandoned session decays all the way to cancelled
+    b = mux.open(256, deadline_s=10)
+    now[0] = 30.0
+    mux.reap()
+    assert mux.status(b) == "preempted"
+    now[0] = 45.0                        # parked AND idle another deadline
+    mux.reap()
+    r = mux.close(b)
+    assert r.stats["cancelled"] and r.stats["expired"]
+    assert mux.sched_stats["expirations"] == 1 and len(mux.store) == 0
+    assert mux.status(keep) == "active"
+    mux.close(keep)
+
+
+def test_deadline_expiry_frees_budget_for_waiters():
+    now = [0.0]
+    mux = StreamMultiplexer(TriangleCounter(RES2), clock=lambda: now[0])
+    a = mux.open(256, deadline_s=5)
+    b = mux.open(256)
+    q = mux.open(256)
+    assert mux.status(q) == "queued"
+    now[0] = 6.0
+    mux.reap()                           # a parks -> its 8 KB admit q
+    assert mux.status(a) == "preempted" and mux.status(q) == "active"
+    for sid in (a, b, q):
+        mux.close(sid)
+
+
+# --------------------------------------------------------------------------
+# CheckpointStore unit behavior
+# --------------------------------------------------------------------------
+def test_checkpoint_store_put_all_is_transactional(tmp_path):
+    counter = TriangleCounter()
+    cks = []
+    for seed in range(3):
+        s = counter.open_stream(64)
+        s.feed(_edges(64, 50, seed))
+        cks.append(s.checkpoint())
+    one = cks[0].nbytes
+    store = CheckpointStore(host_budget_bytes=2 * one)
+    with pytest.raises(BackpressureError):
+        store.put_all(list(enumerate(cks)))      # 3 > 2: nothing placed
+    assert len(store) == 0 and store.host_bytes == 0
+    store.put_all(list(enumerate(cks[:2])))
+    assert len(store) == 2 and store.host_bytes == 2 * one
+    assert 0 in store and 2 not in store
+    back = store.take(0)
+    assert back is cks[0] and store.host_bytes == one
+    store.drop(1)
+    assert len(store) == 0 and store.host_bytes == 0
+
+
+# --------------------------------------------------------------------------
+# Checkpoint/restore on a real (forced host) 8-device mesh
+# --------------------------------------------------------------------------
+MESH_RESTORE_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.api import Plan, TriangleCounter
+    from repro.core import streaming
+    from repro.core.triangle_ref import count_triangles_brute
+    from repro.graphs import generators as gen
+    from repro.launch.mesh import make_ring_mesh
+
+    mesh = make_ring_mesh(8)
+    p = Plan(method="stream", n_stages=8, block_size=300)
+    c = TriangleCounter(plan=p, mesh=mesh)
+    g = gen.gnp(200, 0.2, seed=17)
+    rng = np.random.default_rng(0)
+    e = g.edges[rng.permutation(g.n_edges)]
+    # checkpoint mid-stream on the mesh, restore, finish
+    s = c.open_stream(200)
+    s.feed(e[:700])
+    before = streaming.ingest_trace_count()
+    ck = s.checkpoint()
+    s2 = c.restore_stream(ck)
+    s2.feed(e[700:])
+    got = s2.finalize()
+    assert streaming.ingest_trace_count() - before == 0, "restore retraced"
+    assert got.stats["on_mesh"] and got.stats["sharded"], got.stats
+    # uninterrupted oracle on a fresh counter over the same mesh
+    want = TriangleCounter(plan=p, mesh=mesh).count_stream(200, [e])
+    assert np.asarray(got.count) == np.asarray(want.count), (
+        got.item(), want.item())
+    assert got.item() == count_triangles_brute(g)
+    print("MESH_RESTORE_OK", got.item())
+    """
+)
+
+
+@pytest.mark.slow
+def test_checkpoint_restore_on_eight_devices_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", MESH_RESTORE_SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    assert "MESH_RESTORE_OK" in r.stdout

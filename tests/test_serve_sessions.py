@@ -183,10 +183,6 @@ def test_over_budget_session_queues_then_replays_exactly():
             if start < g.n_edges:
                 mux.feed(sid, g.edges[start:start + 64])
     assert mux.status(sids[2]) == "queued"
-    # closing the queued session while actives pin the budget refuses --
-    # queueing instead of OOMing is the whole contract
-    with pytest.raises(RuntimeError, match="queued"):
-        mux.close(sids[2])
     r0 = mux.close(sids[0])  # frees 8 KB -> FIFO admission replays session 2
     assert mux.status(sids[2]) == "active"
     r1, r2 = mux.close(sids[1]), mux.close(sids[2])

@@ -32,12 +32,22 @@ policies drive the same backpressure-aware loop (feed only ACTIVE
 sessions, ``next_sid`` picks who goes next), so the delta is pure
 scheduling policy.
 
+``bench_cluster`` (op = ``serve_cluster``) prices the multi-host tier:
+the same mixed-session workload through one in-process multiplexer vs a
+``ClusterServer`` routing to 2 worker SUBPROCESSES over the
+length-prefixed socket protocol (per-block RPC + journaling overhead),
+plus the cost of a forced mid-stream live migration
+(checkpoint → evict → restore on a warm target; counts stay
+bit-identical and — asserted from the workers' own trace counters — the
+migration itself compiles NOTHING new).
+
 Rows are MERGED into BENCH_kernels.json — all other ops' records are
 preserved. ``--quick`` is the CI-cheap variant (4 streams / 24 sessions,
 small graphs, interpret-safe CPU defaults).
 
 Usage: PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
            [--streams S] [--out F] [--skip-preempt] [--skip-multiplex]
+           [--skip-cluster]
 """
 from __future__ import annotations
 
@@ -239,6 +249,89 @@ def bench_preempt(*, quick: bool = False) -> list[dict]:
     return records
 
 
+def _cluster_traces(server) -> int:
+    """Sum of the worker processes' ingest-trace counters."""
+    return sum(w.get("ingest_traces", 0) for w in server.stats()["workers"]
+               if w.get("alive"))
+
+
+def bench_cluster(*, quick: bool = False) -> list[dict]:
+    """Multi-host tier: in-process multiplexer vs router + 2 worker
+    subprocesses on the same mixed workload, plus live-migration cost."""
+    from repro.serve.serve_loop import ClusterServer
+
+    S = 8 if quick else 16
+    n, m, block = (256, 2_000, 256) if quick else (512, 8_000, 1024)
+    reps = 3 if quick else 5
+    streams = build_streams(S, n, m, block)
+    m_total = sum(len(g.edges) for g, _, _ in streams)
+    requests = [(n, blocks) for _, blocks, _ in streams]
+    wants = [want for _, _, want in streams]
+    shape = f"S{S}/n{n}/m{m_total}/b{block}/w2"
+    n_blocks_total = sum(len(b) for _, b, _ in streams)
+
+    local = TriangleServer()
+    state = 4 * n * (-(-n // 32))  # dense bitset per session
+    specs = [{"memory_bytes": S * state}, {"memory_bytes": S * state}]
+    records = []
+    with ClusterServer(specs, checkpoint_every_bytes=None) as srv:
+        # warm both paths (workers compile their shared ingest trace once)
+        base = srv.serve_streams(requests, block_size=block)
+        assert [r.item() for r in base] == wants, "cluster counts wrong"
+        ref = local.serve_streams(requests, block_size=block)
+        for a, b in zip(ref, base):
+            assert np.asarray(a.count) == np.asarray(b.count)  # bit-identical
+
+        for method, server in (("single_process", local),
+                               ("cluster_2workers", srv)):
+            samples = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = server.serve_streams(requests, block_size=block)
+                jax.block_until_ready([r.count for r in out])
+                samples.append((time.perf_counter() - t0) * 1e3)
+                assert [r.item() for r in out] == wants
+            ms = statistics.median(samples)
+            records.append({
+                "op": "serve_cluster", "shape": shape, "method": method,
+                "median_ms": round(ms, 3), "grid_steps": n_blocks_total,
+                "edges_per_s": round(m_total / (ms / 1e3)),
+            })
+            print(f"  {method:22s} {ms:9.1f} ms for {S} streams "
+                  f"({m_total} edges, {records[-1]['edges_per_s']:,} edges/s)")
+
+        # forced mid-stream live migration: feed half, move one session to
+        # the other worker, feed the rest — exact counts, zero new traces
+        mig, traces0 = [], _cluster_traces(srv)
+        for _ in range(min(reps, 3)):
+            sids = [srv.open_stream(nn, block_size=block)
+                    for nn, _ in requests]
+            for sid, (_, blocks) in zip(sids, requests):
+                for b in blocks[:len(blocks) // 2]:
+                    srv.feed(sid, b)
+            t0 = time.perf_counter()
+            srv.migrate_stream(sids[0])
+            mig.append((time.perf_counter() - t0) * 1e3)
+            for sid, (_, blocks) in zip(sids, requests):
+                for b in blocks[len(blocks) // 2:]:
+                    srv.feed(sid, b)
+            out = [srv.close_stream(sid) for sid in sids]
+            assert [r.item() for r in out] == wants, "migrated counts wrong"
+        new_traces = _cluster_traces(srv) - traces0
+        assert new_traces == 0, \
+            f"live migration must compile nothing new, got {new_traces}"
+        ms = statistics.median(mig)
+        records.append({
+            "op": "serve_cluster", "shape": shape, "method": "live_migration",
+            "median_ms": round(ms, 3), "grid_steps": len(mig),
+            "migrations": srv.stats()["migrations"],
+            "ingest_traces": new_traces,
+        })
+        print(f"  {'live_migration':22s} {ms:9.1f} ms per migration "
+              f"(checkpoint→evict→restore, {new_traces} new traces)")
+    return records
+
+
 def merge_bench_json(records: list[dict], out_path: str = DEFAULT_OUT) -> str:
     """Append/refresh the serve rows in BENCH_kernels.json, preserving every
     other op's records — kernel_bench's writer owns the one merge
@@ -264,6 +357,8 @@ def main() -> None:
                     help="skip the heavy-tailed FIFO-vs-fair scenario")
     ap.add_argument("--skip-multiplex", action="store_true",
                     help="skip the interleaved-vs-sequential scenario")
+    ap.add_argument("--skip-cluster", action="store_true",
+                    help="skip the multi-host router + worker-process scenario")
     args = ap.parse_args()
     print(f"serve_bench: backend={jax.default_backend()} quick={args.quick}")
     records = []
@@ -271,6 +366,8 @@ def main() -> None:
         records += bench_serve(quick=args.quick, n_streams=args.streams)
     if not args.skip_preempt:
         records += bench_preempt(quick=args.quick)
+    if not args.skip_cluster:
+        records += bench_cluster(quick=args.quick)
     path = merge_bench_json(records, args.out)
     print(f"merged {len(records)} serve records into {path}")
 

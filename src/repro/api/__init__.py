@@ -54,12 +54,16 @@ from repro.api.planner import (
     Admission,
     BackpressureError,
     GraphStats,
+    Placement,
     Plan,
     Resources,
+    WorkerLoad,
     admit_session,
+    place_session,
     plan,
     plan_for_graph,
     stream_sizing,
+    worker_admission,
 )
 from repro.api.counter import (
     CountResult,
@@ -77,12 +81,16 @@ __all__ = [
     "Admission",
     "BackpressureError",
     "GraphStats",
+    "Placement",
     "Plan",
     "Resources",
+    "WorkerLoad",
     "admit_session",
+    "place_session",
     "plan",
     "plan_for_graph",
     "stream_sizing",
+    "worker_admission",
     "CountResult",
     "SessionCheckpoint",
     "StreamSession",

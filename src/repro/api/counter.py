@@ -78,8 +78,11 @@ class SessionCheckpoint:
     ``nbytes`` is what the snapshot charges against a host checkpoint budget;
     ``state_bytes`` is the per-stage device footprint the session pins when
     restored (what admission re-charges on readmission). ``spill``/``load``
-    round-trip the checkpoint through one ``.npz`` file for storage beyond
-    the host budget — ``arrays`` is None while spilled.
+    round-trip the checkpoint through one COMPRESSED ``.npz`` file for
+    storage beyond the host budget — ``arrays`` is None while spilled, and
+    ``disk_bytes`` is the file's actual on-disk size (sparse bitset rows
+    deflate heavily, so disk budgets charge compressed bytes, not
+    ``nbytes``).
     """
 
     n_nodes: int
@@ -93,15 +96,19 @@ class SessionCheckpoint:
     n_epochs_advanced: int
     wall_s: float
     path: str | None = None
+    disk_bytes: int | None = None
 
     @property
     def spilled(self) -> bool:
         return self.arrays is None
 
     def spill(self, path: str) -> None:
-        """Move the snapshot arrays from host memory to one ``.npz`` at
-        ``path`` (everything else — plan, shapes, stats — stays in the
-        object). Idempotent on an already-spilled checkpoint."""
+        """Move the snapshot arrays from host memory to one COMPRESSED
+        ``.npz`` at ``path`` (everything else — plan, shapes, stats — stays
+        in the object). Bitset state is mostly zero words for sparse
+        streams, so deflate routinely shrinks the snapshot by an order of
+        magnitude; ``disk_bytes`` records the real file size for disk-budget
+        accounting. Idempotent on an already-spilled checkpoint."""
         if self.arrays is None:
             return
         meta = json.dumps({
@@ -111,8 +118,9 @@ class SessionCheckpoint:
             "n_blocks": self.n_blocks,
             "n_epochs_advanced": self.n_epochs_advanced,
             "wall_s": self.wall_s})
-        np.savez(path, __meta__=np.array(meta), **self.arrays)
+        np.savez_compressed(path, __meta__=np.array(meta), **self.arrays)
         self.arrays, self.path = None, path
+        self.disk_bytes = int(os.path.getsize(path))
 
     def load_arrays(self) -> dict:
         """The snapshot arrays, loading (and deleting) the spill file if the
@@ -121,7 +129,7 @@ class SessionCheckpoint:
             with np.load(self.path) as z:
                 self.arrays = {k: z[k] for k in z.files if k != "__meta__"}
             os.remove(self.path)
-            self.path = None
+            self.path, self.disk_bytes = None, None
         return self.arrays
 
     def discard(self) -> None:
@@ -170,7 +178,8 @@ class SessionCheckpoint:
                    arrays=arrays, buffer_shape=meta["buffer_shape"],
                    n_blocks=meta["n_blocks"],
                    n_epochs_advanced=meta["n_epochs_advanced"],
-                   wall_s=meta["wall_s"])
+                   wall_s=meta["wall_s"],
+                   disk_bytes=int(os.path.getsize(path)))
 
 
 class _Entry:

@@ -468,3 +468,111 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
         state_bytes=shard_bytes,
         reason=(f"admit-{kind}: {window}{shard_bytes} B/stage state fits the "
                 f"{remaining} B remaining ({bytes_in_use} B already pinned)"))
+
+
+# --------------------------------------------------------------------------
+# Multi-worker placement — per-worker capacity accounting on the cluster tier
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkerLoad:
+    """One worker's capacity story, as the router sees it.
+
+    ``resources`` is the worker's advertised budget (its ``Resources``:
+    memory, ring width, backend); ``charged_bytes`` is the sum of the
+    planner-predicted state bytes of every session the router has placed on
+    it — the Afrati–Ullman accounting unit: placement is charged in BYTES of
+    pinned bitset state, never in session counts. ``mesh_devices`` is how
+    many devices actually host the worker's stage axis (0 = no mesh): the
+    per-stage n²/8/S discount only holds when a plan's ring width equals it,
+    exactly the ``StreamMultiplexer`` mesh re-take rule — the router must
+    predict the same bytes the worker will charge."""
+
+    resources: Resources
+    charged_bytes: int = 0
+    mesh_devices: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """The planner's verdict on placing one session across many workers.
+
+    ``action`` is ``"place"`` (``worker`` indexes the chosen entry in the
+    ``loads`` sequence and ``admission`` is that worker's verdict),
+    ``"queue"`` (no worker fits RIGHT NOW but at least one could when idle —
+    the caller should retry after sessions close), or ``"reject"`` (the
+    session could NEVER fit any worker, even idle — the front door should
+    refuse it outright instead of queueing forever)."""
+
+    action: str
+    worker: int | None
+    admission: Admission | None
+    state_bytes: int
+    reason: str
+
+    @property
+    def placed(self) -> bool:
+        return self.action == "place"
+
+
+def worker_admission(n_nodes: int, load: WorkerLoad, *,
+                     window_epochs: int = 0,
+                     bytes_in_use: int | None = None) -> Admission:
+    """:func:`admit_session` through one worker's mesh model: when the
+    planner's ring width does not match the devices hosting the worker's
+    stage axis, the per-stage discount is unreal (host-emulated sharding
+    pins every shard on one device), so the decision is RE-TAKEN at ring
+    width 1 — the same rule ``StreamMultiplexer`` applies, lifted here so
+    the router's predicted bytes always equal what the worker will charge."""
+    used = load.charged_bytes if bytes_in_use is None else bytes_in_use
+    adm = admit_session(n_nodes, load.resources, bytes_in_use=used,
+                        window_epochs=window_epochs)
+    if (adm.admitted and adm.plan.n_stages > 1
+            and adm.plan.n_stages != load.mesh_devices):
+        adm = admit_session(
+            n_nodes, dataclasses.replace(load.resources, max_stages=1),
+            bytes_in_use=used, window_epochs=window_epochs)
+    return adm
+
+
+def place_session(n_nodes: int, loads, *, window_epochs: int = 0) -> Placement:
+    """Least-loaded-by-bytes placement of one more stream session.
+
+    ``loads`` is the router's view of its live workers (a sequence of
+    :class:`WorkerLoad`). Every worker gets the mesh-aware
+    :func:`worker_admission` verdict at its current ``charged_bytes``; among
+    the workers that ADMIT, the one with the fewest charged bytes wins (ties
+    break to the lowest index — deterministic placement). When nobody admits
+    the verdict degrades the same way :func:`admit_session` does: ``"queue"``
+    if some worker could host the session idle (re-checked at
+    ``bytes_in_use=0``), ``"reject"`` if none ever could — the cluster
+    front door's never-fits rejection."""
+    if not loads:
+        return Placement(action="reject", worker=None, admission=None,
+                         state_bytes=0, reason="no live workers")
+    fitting = []
+    for i, load in enumerate(loads):
+        adm = worker_admission(n_nodes, load, window_epochs=window_epochs)
+        if adm.admitted:
+            fitting.append((i, load, adm))
+    if fitting:
+        i, load, adm = min(fitting, key=lambda t: (t[1].charged_bytes, t[0]))
+        return Placement(
+            action="place", worker=i, admission=adm,
+            state_bytes=adm.state_bytes,
+            reason=(f"least-loaded-by-bytes: worker {i} at "
+                    f"{load.charged_bytes} B charged ({len(fitting)} of "
+                    f"{len(loads)} worker(s) fit); {adm.reason}"))
+    idle_fits = any(
+        worker_admission(n_nodes, load, window_epochs=window_epochs,
+                         bytes_in_use=0).admitted
+        for load in loads)
+    window = f"windowed ({window_epochs} epochs) " if window_epochs else ""
+    if idle_fits:
+        return Placement(
+            action="queue", worker=None, admission=None, state_bytes=0,
+            reason=(f"{window}session of {n_nodes} nodes fits no worker at "
+                    f"current load — retry after sessions close"))
+    return Placement(
+        action="reject", worker=None, admission=None, state_bytes=0,
+        reason=(f"{window}session of {n_nodes} nodes can NEVER fit any of "
+                f"the {len(loads)} worker(s), even idle"))

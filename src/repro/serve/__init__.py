@@ -1,10 +1,13 @@
 """Serving loops: the LM server and the triangle-counting server.
 
 ``serve_loop`` holds the batched request servers (``LMServer``,
-``TriangleServer``); ``sessions`` holds the concurrent multi-stream
-machinery — ``StreamMultiplexer`` (the preemptible fair-share scheduler
-over ``api.StreamSession``) and ``CheckpointStore`` (its bounded host/disk
-parking lot for preempted sessions' checkpoints).
+``TriangleServer``) and the multi-host front door (``ClusterServer``);
+``sessions`` holds the concurrent multi-stream machinery —
+``StreamMultiplexer`` (the preemptible fair-share scheduler over
+``api.StreamSession``) and ``CheckpointStore`` (its bounded host/disk
+parking lot for preempted sessions' checkpoints); ``cluster`` holds the
+router/worker processes and wire protocol the cluster server rides
+(byte-charged placement, checkpoint-based migration and failover).
 """
 from repro.serve.sessions import CheckpointStore, StreamMultiplexer
 

@@ -1,0 +1,32 @@
+"""Multi-host serving tier: router + worker processes over one wire format.
+
+The paper's pipeline wins exactly when the graph does not fit one
+processor's memory; this package lifts the serving stack past one HOST's
+memory the same way. A :class:`ClusterRouter` places incoming stream
+sessions across worker PROCESSES by planner-predicted state bytes
+(``repro.api.place_session`` — least-loaded-by-bytes, never-fits rejection
+at the front door), each worker running the ordinary
+:class:`~repro.serve.sessions.StreamMultiplexer` behind a length-prefixed
+socket protocol (:mod:`.protocol`). PR 6's bit-identical
+``SessionCheckpoint`` is the migration primitive: the router moves a live
+session between workers by checkpoint/evict on one and restore on the
+other (zero new traces, exact counts), and resurrects a dead worker's
+sessions from their spilled ``.npz`` checkpoints plus a replay journal.
+
+Single-machine multi-process today (subprocess workers over localhost
+TCP, the 8-forced-host-device harness for meshes), but the wire and state
+contracts — byte-charged placement, seq-numbered exactly-once replay,
+checkpoint files as the unit of recovery — are the ones a true multi-host
+deployment needs.
+"""
+from repro.serve.cluster.client import WorkerClient
+from repro.serve.cluster.protocol import WorkerDied, recv_msg, send_msg
+from repro.serve.cluster.router import ClusterRouter
+
+__all__ = [
+    "ClusterRouter",
+    "WorkerClient",
+    "WorkerDied",
+    "recv_msg",
+    "send_msg",
+]

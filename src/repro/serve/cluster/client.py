@@ -1,0 +1,144 @@
+"""Router-side handle to one worker process: spawn, RPC, liveness.
+
+``WorkerClient.spawn`` launches ``python -m repro.serve.cluster.worker``
+as a subprocess, waits for its ``WORKER_READY <port>`` handshake, connects
+one TCP socket, and performs the ``hello`` exchange that caches the
+worker's advertised :class:`~repro.api.Resources` and mesh width — the
+inputs to the router's :class:`~repro.api.WorkerLoad` model.
+
+Every RPC failure at the SOCKET level (reset, EOF, broken pipe) marks the
+client dead and raises :class:`~repro.serve.cluster.protocol.WorkerDied`;
+application-level failures arrive as ``{"ok": False}`` replies and
+re-raise as the original exception type (``BackpressureError`` stays a
+``BackpressureError`` across the wire).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import socket as socket_mod
+
+from repro.serve.cluster import protocol
+
+
+class WorkerClient:
+    """One live worker: ``proc`` (subprocess), ``sock`` (its one RPC
+    connection), and the budget/mesh facts it advertised at ``hello``."""
+
+    def __init__(self, proc, sock, hello: dict):
+        from repro.api import Resources
+
+        self.proc = proc
+        self.sock = sock
+        self.pid = hello["pid"]
+        self.resources = Resources(
+            memory_bytes=hello["memory_bytes"],
+            n_devices=hello["n_devices"], backend=hello["backend"],
+            max_stages=hello["max_stages"])
+        self.mesh_devices = int(hello["mesh_devices"])
+        self._alive = True
+
+    @classmethod
+    def spawn(cls, *, memory_bytes: int, devices: int = 1,
+              max_stages: int | None = None, block_size: int | None = None,
+              startup_timeout_s: float = 180.0) -> "WorkerClient":
+        """Start a worker subprocess and complete the spawn handshake.
+
+        The child gets ``PYTHONPATH`` pointing at this repro package's
+        source root, so spawning works from a test or bench process no
+        matter what the caller's cwd is; the worker sets its own
+        ``XLA_FLAGS`` for forced device counts before importing jax."""
+        import repro
+
+        src_root = os.path.dirname(os.path.dirname(
+            os.path.abspath(repro.__file__)))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        if devices > 1:
+            # must be in the child's env BEFORE its first jax import (the
+            # worker module tree imports jax transitively), so the forced
+            # host device count is set here, not in the worker's main()
+            flags = env.get("XLA_FLAGS", "")
+            forced = f"--xla_force_host_platform_device_count={int(devices)}"
+            if forced not in flags:
+                env["XLA_FLAGS"] = f"{flags} {forced}".strip()
+        cmd = [sys.executable, "-u", "-m", "repro.serve.cluster.worker",
+               "--port", "0", "--memory-bytes", str(int(memory_bytes)),
+               "--devices", str(int(devices))]
+        if max_stages is not None:
+            cmd += ["--max-stages", str(int(max_stages))]
+        if block_size is not None:
+            cmd += ["--block-size", str(int(block_size))]
+        proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                stderr=subprocess.DEVNULL, env=env, text=True)
+        deadline = time.monotonic() + startup_timeout_s
+        port = None
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                if proc.poll() is not None:
+                    raise protocol.WorkerDied(
+                        f"worker exited with {proc.returncode} before READY")
+                continue
+            if line.startswith("WORKER_READY"):
+                port = int(line.split()[1])
+                break
+        if port is None:
+            proc.kill()
+            raise protocol.WorkerDied(
+                f"worker not READY within {startup_timeout_s:.0f}s")
+        sock = socket_mod.create_connection(("127.0.0.1", port), timeout=None)
+        sock.setsockopt(socket_mod.IPPROTO_TCP, socket_mod.TCP_NODELAY, 1)
+        client = cls.__new__(cls)
+        client.proc, client.sock, client._alive = proc, sock, True
+        hello, _ = client.rpc({"op": "hello"})
+        client.__init__(proc, sock, hello)
+        return client
+
+    @property
+    def alive(self) -> bool:
+        return self._alive and (self.proc is None or self.proc.poll() is None)
+
+    def rpc(self, header: dict, arrays: dict | None = None) -> tuple:
+        """One request/reply exchange; returns ``(reply_header, arrays)``.
+        Socket failure ⇒ client marked dead + :class:`WorkerDied`; a
+        ``{"ok": False}`` reply re-raises the worker-side exception."""
+        if not self._alive:
+            raise protocol.WorkerDied(
+                f"worker pid {getattr(self, 'pid', '?')} already dead")
+        try:
+            protocol.send_msg(self.sock, header, arrays)
+            reply, out = protocol.recv_msg(self.sock)
+        except protocol.WorkerDied as e:
+            self._alive = False
+            raise protocol.WorkerDied(
+                f"worker pid {getattr(self, 'pid', '?')} lost during "
+                f"{header.get('op')!r}: {e}") from None
+        if not reply.get("ok", False):
+            protocol.raise_remote(reply)
+        return reply, out
+
+    def shutdown(self) -> None:
+        """Graceful stop: ask, then reap (kill if asking failed)."""
+        try:
+            self.rpc({"op": "shutdown"})
+        except protocol.WorkerDied:
+            pass
+        self.kill()
+
+    def kill(self) -> None:
+        """Hard stop: close the socket, kill and reap the subprocess."""
+        self._alive = False
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()
+        if self.proc is not None:
+            self.proc.wait(timeout=30)
+            if self.proc.stdout is not None:
+                self.proc.stdout.close()

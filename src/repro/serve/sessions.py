@@ -101,13 +101,20 @@ class CheckpointStore:
     """Bounded parking lot for preempted sessions' checkpoints.
 
     Host memory first (up to ``host_budget_bytes`` of snapshot arrays), then
-    ``.npz`` spill files under ``spill_dir`` (up to ``spill_budget_bytes``,
-    default 4× the host budget when a spill dir is given, 0 otherwise). A
-    checkpoint that fits neither raises
-    :class:`~repro.api.planner.BackpressureError` — parking is bounded, like
-    every other host-side buffer in the serving tier. ``put_all`` is
-    transactional: it places every checkpoint or none, so a multi-victim
-    preemption never half-commits."""
+    COMPRESSED ``.npz`` spill files under ``spill_dir`` (up to
+    ``spill_budget_bytes`` of actual on-disk bytes — sparse bitset rows
+    deflate heavily, so the disk budget charges what the file really costs,
+    default 4× the host budget when a spill dir is given, 0 otherwise).
+
+    When the host budget is hit the store does NOT fail immediately: it
+    LRU-spills host-resident checkpoints to disk (oldest-parked first) until
+    the new snapshot fits, and raises
+    :class:`~repro.api.planner.BackpressureError` only when the DISK budget
+    is exhausted too — parking is bounded, like every other host-side buffer
+    in the serving tier, but degrades through the cheap tier first.
+    ``put_all`` is transactional: it places every checkpoint (and keeps
+    every eviction) or rolls everything back, so a multi-victim preemption
+    never half-commits."""
 
     def __init__(self, host_budget_bytes: int, *, spill_dir: str | None = None,
                  spill_budget_bytes: int | None = None):
@@ -117,9 +124,13 @@ class CheckpointStore:
             spill_budget_bytes = 4 * self.host_budget_bytes if spill_dir else 0
         self.spill_budget_bytes = int(spill_budget_bytes)
         self.host_bytes = 0
-        self.spill_bytes = 0
+        self.spill_bytes = 0        # compressed on-disk bytes of live spills
+        self.spill_raw_bytes = 0    # the uncompressed bytes those files hold
         self.n_spills = 0
-        self._held: dict[int, tuple] = {}  # sid -> (ckpt, "host"|"disk")
+        self.n_evictions = 0
+        # sid -> [ckpt, "host"|"disk", charged_bytes]; dict order is
+        # parking order, which is the LRU order evictions walk
+        self._held: dict[int, list] = {}
 
     def __contains__(self, sid: int) -> bool:
         return sid in self._held
@@ -127,35 +138,86 @@ class CheckpointStore:
     def __len__(self) -> int:
         return len(self._held)
 
+    @property
+    def compression_ratio(self) -> float:
+        """Raw/compressed over the LIVE spill files (1.0 when none)."""
+        return (self.spill_raw_bytes / self.spill_bytes
+                if self.spill_bytes else 1.0)
+
     def put_all(self, items) -> None:
         """Place every ``(sid, SessionCheckpoint)`` or raise without placing
-        any (host first, then spill) — the all-or-nothing half of a
-        multi-victim preemption."""
-        host_b, spill_b, placement = self.host_bytes, self.spill_bytes, []
-        for _, ckpt in items:
-            if host_b + ckpt.nbytes <= self.host_budget_bytes:
-                host_b += ckpt.nbytes
-                placement.append("host")
-            elif (self.spill_dir is not None
-                  and spill_b + ckpt.nbytes <= self.spill_budget_bytes):
-                spill_b += ckpt.nbytes
-                placement.append("disk")
-            else:
-                from repro.api.planner import BackpressureError
+        any — the all-or-nothing half of a multi-victim preemption. Host
+        first; when the host budget is hit, LRU-evict host-resident
+        checkpoints to compressed disk spills, then spill the incoming
+        snapshot itself; raise only when the disk budget refuses too (any
+        evictions already performed are rolled back)."""
+        from repro.api.planner import BackpressureError
 
+        host_b, spill_b, raw_b = (self.host_bytes, self.spill_bytes,
+                                  self.spill_raw_bytes)
+        placement: list[tuple] = []  # per item: ("host"|"disk", charged)
+        undo: list = []              # (ckpt, held_entry|None, prev_charged)
+        n_spills = n_evictions = 0
+
+        def _spill(sid, ckpt):
+            """Write the compressed file; return its size, or None (file
+            removed again) when the disk budget refuses it."""
+            nonlocal spill_b, raw_b, n_spills
+            if self.spill_dir is None:
+                return None
+            os.makedirs(self.spill_dir, exist_ok=True)
+            ckpt.spill(os.path.join(self.spill_dir, f"ckpt-{sid}.npz"))
+            db = ckpt.disk_bytes
+            if spill_b + db > self.spill_budget_bytes:
+                ckpt.load_arrays()  # reload + delete the just-written file
+                return None
+            spill_b += db
+            raw_b += ckpt.nbytes
+            n_spills += 1
+            return db
+
+        try:
+            for sid, ckpt in items:
+                while host_b + ckpt.nbytes > self.host_budget_bytes:
+                    vsid = next((s for s, h in self._held.items()
+                                 if h[1] == "host"), None)
+                    if vsid is None:
+                        break
+                    victim = self._held[vsid]
+                    db = _spill(vsid, victim[0])
+                    if db is None:
+                        break
+                    host_b -= victim[2]
+                    undo.append((victim[0], victim, victim[2]))
+                    victim[1], victim[2] = "disk", db
+                    n_evictions += 1
+                if host_b + ckpt.nbytes <= self.host_budget_bytes:
+                    host_b += ckpt.nbytes
+                    placement.append(("host", ckpt.nbytes))
+                    continue
+                db = _spill(sid, ckpt)
+                if db is not None:
+                    placement.append(("disk", db))
+                    undo.append((ckpt, None, 0))
+                    continue
                 raise BackpressureError(
                     f"checkpoint store full: {ckpt.nbytes} B snapshot over "
                     f"host {self.host_bytes}/{self.host_budget_bytes} B and "
                     f"spill {self.spill_bytes}/{self.spill_budget_bytes} B "
                     f"({len(self._held)} checkpoint(s) parked) — close or "
                     f"restore a preempted session first")
-        for (sid, ckpt), where in zip(items, placement):
-            if where == "disk":
-                os.makedirs(self.spill_dir, exist_ok=True)
-                ckpt.spill(os.path.join(self.spill_dir, f"ckpt-{sid}.npz"))
-                self.n_spills += 1
-            self._held[sid] = (ckpt, where)
-        self.host_bytes, self.spill_bytes = host_b, spill_b
+        except BaseException:
+            for ckpt, entry, prev_charged in reversed(undo):
+                ckpt.load_arrays()  # reload host arrays, delete the file
+                if entry is not None:  # evicted resident: back to host
+                    entry[1], entry[2] = "host", prev_charged
+            raise
+        for (sid, ckpt), (where, charged) in zip(items, placement):
+            self._held[sid] = [ckpt, where, charged]
+        self.host_bytes, self.spill_bytes, self.spill_raw_bytes = \
+            host_b, spill_b, raw_b
+        self.n_spills += n_spills
+        self.n_evictions += n_evictions
 
     def put(self, sid: int, ckpt) -> None:
         self.put_all([(sid, ckpt)])
@@ -163,12 +225,18 @@ class CheckpointStore:
     def take(self, sid: int):
         """Remove and return ``sid``'s checkpoint (the restore half; loading
         a spilled checkpoint's arrays is the checkpoint's own job)."""
-        ckpt, where = self._held.pop(sid)
+        ckpt, where, charged = self._held.pop(sid)
         if where == "host":
-            self.host_bytes -= ckpt.nbytes
+            self.host_bytes -= charged
         else:
-            self.spill_bytes -= ckpt.nbytes
+            self.spill_bytes -= charged
+            self.spill_raw_bytes -= ckpt.nbytes
         return ckpt
+
+    def where(self, sid: int) -> str:
+        """``"host"`` or ``"disk"`` — where ``sid``'s checkpoint lives now
+        (evictions move parked checkpoints host → disk behind the scenes)."""
+        return self._held[sid][1]
 
     def drop(self, sid: int) -> None:
         """Discard ``sid``'s checkpoint (cancelled session: the state is not
@@ -232,8 +300,8 @@ class StreamMultiplexer:
         self._results: dict[int, object] = {}   # sid -> CountResult
         self.bytes_in_use = 0                   # device bytes pinned by actives
         self.queue_bytes = 0                    # host bytes buffered by waiters
-        self.sched_stats = {"preemptions": 0, "restores": 0,
-                            "cancellations": 0, "expirations": 0}
+        self._sched = {"preemptions": 0, "restores": 0,
+                       "cancellations": 0, "expirations": 0}
         self._next_id = 0
 
     # -- lifecycle ---------------------------------------------------------
@@ -379,6 +447,69 @@ class StreamMultiplexer:
         rec.parked = True
         self._admit_pending()
 
+    def checkpoint(self, sid: int):
+        """Snapshot ACTIVE session ``sid`` WITHOUT disturbing it and return
+        the ``SessionCheckpoint`` — the durability primitive behind the
+        cluster tier's failover story: the router periodically checkpoints
+        sessions to shared storage so a dead worker's streams can be
+        resurrected elsewhere. The session stays active and keeps ingesting;
+        the snapshot covers exactly the edges fed so far."""
+        rec = self._rec(sid)
+        if rec.state != "active":
+            raise RuntimeError(
+                f"session {sid} is {rec.state} — only an active session has "
+                f"device state to checkpoint")
+        rec.last_activity = self._clock()
+        return rec.session.checkpoint()
+
+    def evict(self, sid: int):
+        """Checkpoint ACTIVE session ``sid`` and FORGET it: the state leaves
+        the device AND this scheduler — the sending half of checkpoint-based
+        migration (contrast ``preempt``, which parks the checkpoint locally
+        for transparent readmission). Afterwards the sid is unknown here
+        (``feed``/``close`` raise ``KeyError``) and the caller owns the
+        returned checkpoint; freed budget admits waiters immediately.
+        Waiting sessions cannot be evicted — they have no device state;
+        cancel or keep buffering them instead."""
+        rec = self._rec(sid)
+        if rec.state != "active":
+            raise RuntimeError(
+                f"session {sid} is {rec.state} — only an active session has "
+                f"device state to evict")
+        ckpt = rec.session.checkpoint()
+        self.bytes_in_use -= rec.state_bytes
+        del self._recs[sid]
+        self._admit_pending()
+        return ckpt
+
+    def adopt(self, ckpt, *, priority: int = 0) -> int:
+        """Adopt a checkpoint taken by ANOTHER multiplexer (another worker
+        process): restore it as a fresh ACTIVE session of this scheduler and
+        return its NEW sid — the receiving half of migration/failover. The
+        restored state re-pins against THIS multiplexer's budget (the
+        checkpoint's own plan decides sharded vs dense, so the predicted
+        bytes honour the mesh the state was sharded for); a checkpoint that
+        does not fit the free budget raises ``BackpressureError`` without
+        touching the device, so the router can place it elsewhere."""
+        from repro.api.planner import BackpressureError
+
+        needed = self._restored_state_bytes(ckpt)
+        free = self.resources.memory_bytes - self.bytes_in_use
+        if needed > free:
+            raise BackpressureError(
+                f"cannot adopt checkpoint of {needed} B restored state: "
+                f"{free} B free of {self.resources.memory_bytes} B — close "
+                f"or preempt an active session first")
+        sid = self._next_id
+        self._next_id += 1
+        rec = _Session(
+            sid=sid, n_nodes=ckpt.n_nodes, block_size=ckpt.block_size,
+            window=ckpt.plan.window_epochs or None, priority=int(priority),
+            deadline_s=None, last_activity=self._clock())
+        self._recs[sid] = rec
+        self._restore_from(rec, ckpt)
+        return sid
+
     def close(self, sid: int):
         """Finalize ``sid`` and return its ``CountResult`` (idempotent).
 
@@ -417,7 +548,7 @@ class StreamMultiplexer:
         if rec.state == "preempted":
             self._force_restore(rec)
         if rec.state == "queued":
-            self.sched_stats["cancellations"] += 1
+            self._sched["cancellations"] += 1
             result = self._cancel(rec)
         else:
             session = rec.session
@@ -466,6 +597,18 @@ class StreamMultiplexer:
         self._reap()
 
     @property
+    def sched_stats(self) -> dict:
+        """Scheduler counters plus the checkpoint store's spill telemetry:
+        ``spills``/``evictions`` counts and the live spill files' raw vs
+        compressed (on-disk) bytes with their compression ratio."""
+        s = self.store
+        return {**self._sched, "spills": s.n_spills,
+                "evictions": s.n_evictions,
+                "spill_raw_bytes": s.spill_raw_bytes,
+                "spill_disk_bytes": s.spill_bytes,
+                "spill_compression": round(s.compression_ratio, 3)}
+
+    @property
     def n_active(self) -> int:
         return sum(r.state == "active" for r in self._recs.values())
 
@@ -484,6 +627,20 @@ class StreamMultiplexer:
         if sid in self._results:
             raise RuntimeError(f"session {sid} already closed")
         raise KeyError(f"unknown session {sid}")
+
+    def _restored_state_bytes(self, ckpt) -> int:
+        """Device bytes a ``restore_stream(ckpt)`` will pin HERE: the
+        checkpoint plan's per-stage epoch-ring slice when this counter's
+        mesh hosts the stage axis, the full state otherwise (host-emulated
+        sharding pins every shard) — mirrors ``StreamSession.state_bytes``
+        without touching the device."""
+        p = ckpt.plan
+        w = -(-ckpt.n_nodes // 32)
+        per_stage = (max(p.window_epochs, 1) * 4 * ckpt.n_nodes
+                     * -(-w // p.n_stages))
+        if p.n_stages > 1 and not self.counter._mesh_matches(p.n_stages):
+            return per_stage * p.n_stages
+        return per_stage
 
     def _admission(self, n_nodes: int, bytes_in_use: int,
                    window: int | None, *, priority: int = 0,
@@ -548,7 +705,7 @@ class StreamMultiplexer:
             self.bytes_in_use -= r.state_bytes
             r.n_preempts += 1
             r.last_activity = self._clock()
-            self.sched_stats["preemptions"] += 1
+            self._sched["preemptions"] += 1
 
     def _restore_from(self, rec: _Session, ckpt) -> None:
         rec.session = self.counter.restore_stream(ckpt)
@@ -556,7 +713,7 @@ class StreamMultiplexer:
         rec.state_bytes = rec.session.state_bytes
         self.bytes_in_use += rec.state_bytes
         rec.last_activity = self._clock()
-        self.sched_stats["restores"] += 1
+        self._sched["restores"] += 1
         self._replay(rec)
 
     def _force_restore(self, rec: _Session) -> None:
@@ -675,7 +832,7 @@ class StreamMultiplexer:
                     rec.session = None
             elif rec.state == "preempted":
                 self.store.drop(rec.sid)
-            self.sched_stats["expirations"] += 1
+            self._sched["expirations"] += 1
             self._cancel(rec, expired=True)
             freed = True
         if freed:

@@ -1,0 +1,425 @@
+"""Multi-host serving tier: wire protocol, byte-charged placement, the
+router/worker cluster demo, checkpoint-based migration, and failover.
+
+The acceptance pins for the cluster PR live here:
+
+- cluster demo — a router over ≥2 subprocess workers (one with a FORCED
+  8-device mesh) serves 16 mixed dense/sharded/windowed sessions with
+  counts AND dtypes bit-identical to one in-process ``StreamMultiplexer``
+  (`test_cluster_demo_sixteen_mixed_sessions_bit_identical`).
+- migration — a forced mid-stream migration finishes with the exact count
+  and retraces NOTHING on a warm target
+  (`test_forced_migration_bit_identical_and_zero_new_traces`).
+- failover — SIGKILLing a worker resurrects its sessions on the survivor
+  from spilled checkpoints + journal replay (and by fresh-open + full
+  replay when never checkpointed), exact counts, zero new traces
+  (`test_killed_worker_recovery_exact_counts_zero_new_traces`).
+- accounting — the router's per-worker charged bytes always equals the
+  planner's independently recomputed predictions, and returns to zero
+  after close/migrate (`test_router_ledger_matches_planner_predictions`).
+"""
+import os
+import socket
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    BackpressureError,
+    Resources,
+    TriangleCounter,
+    WorkerLoad,
+    place_session,
+    worker_admission,
+)
+from repro.graphs import generators as gen
+from repro.serve.cluster import ClusterRouter, WorkerClient, protocol
+from repro.serve.cluster.protocol import WorkerDied
+from repro.serve.sessions import StreamMultiplexer
+
+BS = 64  # uniform block size: every feed is an exact multiple, so neither
+         # checkpoints nor restores ever see a ragged-tail trace
+
+
+def _blocks(n, p, seed):
+    """Shuffled gnp edges cut into exact BS-row blocks (tail dropped)."""
+    g = gen.gnp(n, p, seed=seed)
+    rng = np.random.default_rng(seed)
+    e = g.edges[rng.permutation(g.n_edges)]
+    m = (len(e) // BS) * BS
+    return [e[i:i + BS] for i in range(0, m, BS)]
+
+
+def _local_oracle():
+    return StreamMultiplexer(
+        TriangleCounter(Resources(memory_bytes=1 << 30)), block_size=BS)
+
+
+def _worker_traces(w: WorkerClient) -> int:
+    reply, _ = w.rpc({"op": "stats"})
+    return reply["ingest_traces"]
+
+
+# --------------------------------------------------------------------------
+# Wire protocol (no subprocess)
+# --------------------------------------------------------------------------
+def test_protocol_roundtrip_headers_and_arrays():
+    """One frame carries a JSON header plus raw array buffers; dtype,
+    shape, and bits survive the trip (numpy values in headers included)."""
+    a, b = socket.socketpair()
+    edges = np.array([[0, 1], [2, 3]], dtype=np.int32)
+    count = np.array(7, dtype=np.int64)
+    protocol.send_msg(a, {"op": "feed", "sid": np.int64(3), "f": 0.5},
+                      {"edges": edges, "count": count})
+    header, arrays = protocol.recv_msg(b)
+    assert header == {"op": "feed", "sid": 3, "f": 0.5}
+    assert arrays["edges"].dtype == np.int32
+    assert np.array_equal(arrays["edges"], edges)
+    assert arrays["count"].dtype == np.int64 and arrays["count"] == 7
+    arrays["edges"][0, 0] = 9  # rebuilt buffers are writable copies
+    a.close(), b.close()
+
+
+def test_protocol_eof_raises_worker_died():
+    """A peer that vanishes mid-message surfaces as WorkerDied — the
+    router's failure detector."""
+    a, b = socket.socketpair()
+    a.sendall(b"\x00\x00\x00\xff")  # length prefix, then silence
+    a.close()
+    with pytest.raises(WorkerDied):
+        protocol.recv_msg(b)
+    b.close()
+
+
+def test_protocol_remote_errors_keep_their_type():
+    """Worker-side failures re-raise as the original exception type, so
+    budget refusals stay catchable as BackpressureError across the wire."""
+    with pytest.raises(BackpressureError, match="full"):
+        protocol.raise_remote({"ok": False, "etype": "BackpressureError",
+                               "error": "store full"})
+    with pytest.raises(KeyError):
+        protocol.raise_remote({"ok": False, "etype": "KeyError",
+                               "error": "unknown session 4"})
+    with pytest.raises(RuntimeError, match="SomethingOdd"):
+        protocol.raise_remote({"ok": False, "etype": "SomethingOdd",
+                               "error": "?"})
+
+
+# --------------------------------------------------------------------------
+# Placement planner (no subprocess)
+# --------------------------------------------------------------------------
+def test_place_session_least_loaded_by_bytes():
+    """Among the workers whose admission accepts, the fewest charged bytes
+    wins; ties break to the lowest index."""
+    res = Resources(memory_bytes=120_000)
+    loads = [WorkerLoad(res, charged_bytes=16_384),
+             WorkerLoad(res, charged_bytes=8_192),
+             WorkerLoad(res, charged_bytes=8_192)]
+    pl = place_session(256, loads)
+    assert pl.placed and pl.worker == 1 and pl.state_bytes == 8_192
+    assert place_session(256, [WorkerLoad(res)] * 2).worker == 0
+
+
+def test_place_session_queue_and_never_fits_reject():
+    """No worker fits now → queue; no worker could fit even idle → reject
+    (the front door's never-fits rejection)."""
+    small = Resources(memory_bytes=10_000)
+    pl = place_session(256, [WorkerLoad(small, charged_bytes=9_000)])
+    assert pl.action == "queue"
+    assert place_session(2048, [WorkerLoad(small)]).action == "reject"
+    assert place_session(64, []).action == "reject"  # no live workers
+
+
+def test_worker_admission_retakes_mesh_mismatch():
+    """A sharded plan's per-stage discount only counts when the worker's
+    mesh really hosts that ring width; otherwise the verdict is re-taken
+    at ring width 1 — the router must predict what the worker charges."""
+    res = Resources(memory_bytes=30_000, n_devices=8, max_stages=8)
+    # n=1280 only fits sharded: 8 stages × 4·1280·5 = 25 600 B per stage
+    on_mesh = worker_admission(1280, WorkerLoad(res, mesh_devices=8))
+    assert on_mesh.admitted and on_mesh.plan.n_stages == 8
+    assert on_mesh.state_bytes == 25_600
+    off_mesh = worker_admission(1280, WorkerLoad(res, mesh_devices=0))
+    assert not off_mesh.admitted  # host-emulated shards pin all 204 800 B
+
+
+# --------------------------------------------------------------------------
+# The cluster itself: one meshed worker + one plain worker, module-shared
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cluster():
+    """Worker 0: 8 forced host devices (ring mesh), 28 000 B — hosts ONLY
+    the sharded whale (25 600 B per stage; a second session never fits).
+    Worker 1: plain single device, 120 000 B — hosts the small mix."""
+    wa = WorkerClient.spawn(memory_bytes=28_000, devices=8)
+    wb = WorkerClient.spawn(memory_bytes=120_000)
+    router = ClusterRouter([wa, wb], checkpoint_every_bytes=None)
+    yield router
+    router.shutdown()
+
+
+def test_cluster_demo_sixteen_mixed_sessions_bit_identical(cluster):
+    """16 mixed sessions across 2 workers — 1 ring-sharded whale (mesh
+    worker), 10 dense, 5 windowed — every count AND dtype bit-identical to
+    the single-process multiplexer serving the same feeds."""
+    router = cluster
+    local = _local_oracle()
+    whale_blocks = _blocks(1280, 0.004, seed=2)
+    dense_blocks = [_blocks(256, 0.05, seed=10 + i) for i in range(10)]
+    win_blocks = [_blocks(128, 0.2, seed=30 + i) for i in range(5)]
+
+    # the whale FIRST: with 25 600 B charged to worker 0, every later
+    # session must prefer worker 1 (and worker 0 could not admit it anyway)
+    gw, lw = router.open(1280, block_size=BS), local.open(1280, block_size=BS)
+    assert router.worker_of(gw) == 0
+    gd = [router.open(256, block_size=BS) for _ in range(10)]
+    ld = [local.open(256, block_size=BS) for _ in range(10)]
+    gv = [router.open(128, block_size=BS, window=2) for _ in range(5)]
+    lv = [local.open(128, block_size=BS, window=2) for _ in range(5)]
+    assert all(router.worker_of(g) == 1 for g in gd + gv)
+    assert len(router._sessions) == 16
+
+    # interleaved ingest: whale + dense + windowed round-robin, windowed
+    # sessions sliding their window every 8 blocks
+    for j in range(max(len(whale_blocks),
+                       *(len(b) for b in dense_blocks + win_blocks))):
+        if j < len(whale_blocks):
+            router.feed(gw, whale_blocks[j])
+            local.feed(lw, whale_blocks[j])
+        for i, bl in enumerate(dense_blocks):
+            if j < len(bl):
+                router.feed(gd[i], bl[j])
+                local.feed(ld[i], bl[j])
+        for i, bl in enumerate(win_blocks):
+            if j < len(bl):
+                router.feed(gv[i], bl[j])
+                local.feed(lv[i], bl[j])
+                if j % 8 == 7:
+                    router.advance(gv[i])
+                    local.advance(lv[i])
+
+    results = 0
+    for g, l in [(gw, lw)] + list(zip(gd, ld)) + list(zip(gv, lv)):
+        r, lr = router.close(g), local.close(l)
+        assert r.item() == lr.item()
+        assert np.asarray(r.count).dtype == np.asarray(lr.count).dtype
+        results += 1
+    assert results == 16
+    # the whale really ran ring-sharded on the mesh worker
+    rw = router._results[gw]
+    assert rw.plan.n_stages == 8 and rw.stats["worker"] == 0
+    assert router.charged_bytes() == [0, 0]  # ledger drains with the closes
+
+
+def test_forced_migration_bit_identical_and_zero_new_traces(cluster):
+    """Mid-stream migration: checkpoint+evict on the source, restore on the
+    target — exact count, exact dtype, and ZERO new ingest traces on a
+    target that has already served the session's block shape."""
+    router = cluster
+    local = _local_oracle()
+    b1, b2 = _blocks(256, 0.05, seed=50), _blocks(256, 0.05, seed=51)
+    s1, l1 = router.open(256, block_size=BS), local.open(256, block_size=BS)
+    s2, l2 = router.open(256, block_size=BS), local.open(256, block_size=BS)
+    assert router.worker_of(s1) == 0 and router.worker_of(s2) == 1
+    half = len(b2) // 2
+    for b in b1:
+        router.feed(s1, b)
+        local.feed(l1, b)
+    for b in b2[:half]:
+        router.feed(s2, b)
+        local.feed(l2, b)
+    # worker 0 served s1 (same family/shape): migrating s2 onto it must
+    # reuse its compile cache end to end
+    before = _worker_traces(router.workers[0])
+    assert router.migrate(s2, to=0) == 0
+    assert router.worker_of(s2) == 0 and router.status(s2) == "active"
+    for b in b2[half:]:
+        router.feed(s2, b)
+        local.feed(l2, b)
+    assert _worker_traces(router.workers[0]) - before == 0
+    for g, l in ((s1, l1), (s2, l2)):
+        r, lr = router.close(g), local.close(l)
+        assert r.item() == lr.item()
+        assert np.asarray(r.count).dtype == np.asarray(lr.count).dtype
+    assert router.stats()["migrations"] >= 1
+    assert router.charged_bytes() == [0, 0]
+
+
+def test_router_ledger_matches_planner_predictions(cluster):
+    """The accounting property: at every step, each worker's charged bytes
+    equals the SUM of its sessions' independently recomputed
+    planner-predicted bytes — dense, sharded, and windowed sessions mixed,
+    through open, migrate, and close alike."""
+    router = cluster
+    sim = {0: 0, 1: 0}          # the independent planner-side ledger
+    placed = {}                 # gid -> (worker, predicted bytes)
+
+    def predict(n, wi, window):
+        w = router.workers[wi]
+        adm = worker_admission(
+            n, WorkerLoad(w.resources, charged_bytes=sim[wi],
+                          mesh_devices=w.mesh_devices),
+            window_epochs=window or 0)
+        assert adm.admitted
+        return adm.state_bytes
+
+    def checked_open(n, window=None):
+        gid = router.open(n, block_size=BS, window=window)
+        wi = router.worker_of(gid)
+        bytes_ = predict(n, wi, window)
+        sim[wi] += bytes_
+        placed[gid] = (wi, bytes_)
+        assert router.charged_bytes() == [sim[0], sim[1]]
+        return gid
+
+    # whale → sharded on the mesh worker; dense + windowed mix → worker 1
+    whale = checked_open(1280)
+    gids = [checked_open(256) for _ in range(3)]
+    gids += [checked_open(128, window=2) for _ in range(2)]
+
+    # close the whale (mesh worker drains), then migrate a dense session
+    # there; the ledger must move the RE-predicted bytes for the new home
+    wi, bytes_ = placed.pop(whale)
+    router.close(whale)
+    sim[wi] -= bytes_
+    assert router.charged_bytes() == [sim[0], sim[1]]
+    victim = gids[0]
+    src, old_bytes = placed[victim]
+    sim[src] -= old_bytes
+    target = router.migrate(victim)
+    bytes_ = predict(256, target, None)
+    sim[target] += bytes_
+    placed[victim] = (target, bytes_)
+    assert router.charged_bytes() == [sim[0], sim[1]]
+
+    for gid in gids:
+        wi, bytes_ = placed[gid]
+        router.close(gid)
+        sim[wi] -= bytes_
+        assert router.charged_bytes() == [sim[0], sim[1]]
+    assert router.charged_bytes() == [0, 0]  # and back to zero
+
+
+def test_open_rejects_never_fits_and_queues_full_cluster(cluster):
+    """The front door enforces the placement verdicts: never-fits →
+    ValueError, fits-but-not-now → BackpressureError (no router-side
+    buffering of unplaced sessions)."""
+    router = cluster
+    with pytest.raises(ValueError, match="NEVER"):
+        router.open(4096, block_size=BS)  # 2 MiB state: no worker, even idle
+    # fill the cluster — worker 0 holds 3 dense 8 KB sessions, worker 1
+    # holds 14 — then ask for one more than fits anywhere
+    gids = [router.open(256, block_size=BS) for _ in range(17)]
+    with pytest.raises(BackpressureError, match="retry"):
+        router.open(256, block_size=BS)
+    for gid in gids:
+        router.close(gid)
+    assert router.charged_bytes() == [0, 0]
+
+
+# --------------------------------------------------------------------------
+# Failover: SIGKILL a worker, sessions resurrect on the survivor
+# --------------------------------------------------------------------------
+def test_killed_worker_recovery_exact_counts_zero_new_traces(tmp_path):
+    """Kill a worker mid-stream: the router detects the lost connection at
+    the next op and resurrects its sessions on the survivor — the
+    checkpointed one from its spilled .npz + journal replay, the
+    never-checkpointed one from a fresh open + FULL journal replay. Both
+    finish with counts bit-identical to the single-process run, and the
+    survivor (already warm for the block shape) retraces nothing."""
+    w0 = WorkerClient.spawn(memory_bytes=120_000)
+    w1 = WorkerClient.spawn(memory_bytes=120_000)
+    with ClusterRouter([w0, w1], checkpoint_dir=str(tmp_path),
+                       checkpoint_every_bytes=None) as router:
+        local = _local_oracle()
+        b_a, b_b, b_c = (_blocks(256, 0.05, seed=s) for s in (60, 61, 62))
+        a = router.open(256, block_size=BS)   # → worker 0 (tie, low index)
+        b = router.open(256, block_size=BS)   # → worker 1
+        c = router.open(256, block_size=BS)   # → worker 0 again (tie)
+        assert [router.worker_of(s) for s in (a, b, c)] == [0, 1, 0]
+        la, lb, lc = (local.open(256, block_size=BS) for _ in range(3))
+        half = len(b_a) // 2
+        for blocks, g, l in ((b_a, a, la), (b_b, b, lb), (b_c, c, lc)):
+            for blk in blocks[:half]:
+                router.feed(g, blk)
+                local.feed(l, blk)
+        assert router.checkpoint(a) is not None  # a: durable; c: journal-only
+        assert os.path.exists(router._ckpt_path(a))
+
+        traces_before = _worker_traces(w1)
+        w0.proc.kill()                          # no goodbye
+        # next op on a worker-0 session trips the failure detector
+        for blocks, g, l in ((b_a, a, la), (b_b, b, lb), (b_c, c, lc)):
+            for blk in blocks[half:]:
+                router.feed(g, blk)
+                local.feed(l, blk)
+        assert router.worker_of(a) == 1 and router.worker_of(c) == 1
+        assert _worker_traces(w1) - traces_before == 0
+        st = router.stats()
+        assert st["worker_deaths"] == 1 and st["resurrections"] == 2
+        assert st["workers"][0] == {"alive": False}
+        for g, l in ((a, la), (b, lb), (c, lc)):
+            r, lr = router.close(g), local.close(l)
+            assert r.item() == lr.item()
+            assert np.asarray(r.count).dtype == np.asarray(lr.count).dtype
+        assert router.charged_bytes() == [0, 0]
+
+
+def test_displaced_session_lands_when_capacity_frees(tmp_path):
+    """A dead worker's session that fits NO survivor degrades to
+    'displaced' (feeds journal, nothing lost) and lands automatically on
+    the next op after capacity frees."""
+    w0 = WorkerClient.spawn(memory_bytes=9_000)    # one 256-session wide
+    w1 = WorkerClient.spawn(memory_bytes=9_000)
+    with ClusterRouter([w0, w1], checkpoint_dir=str(tmp_path),
+                       checkpoint_every_bytes=None) as router:
+        local = _local_oracle()
+        blocks_a, blocks_b = _blocks(256, 0.05, 70), _blocks(256, 0.05, 71)
+        a, b = (router.open(256, block_size=BS) for _ in range(2))
+        la, lb = (local.open(256, block_size=BS) for _ in range(2))
+        for blk in blocks_a:
+            router.feed(a, blk)
+            local.feed(la, blk)
+        for blk in blocks_b[:2]:
+            router.feed(b, blk)
+            local.feed(lb, blk)
+        router.checkpoint(b)
+        router.workers[router.worker_of(b)].proc.kill()
+        router.feed(b, blocks_b[2])               # death detected: no room
+        local.feed(lb, blocks_b[2])
+        assert router.status(b) == "displaced"
+        assert router.stats()["displaced"] == 1
+        r_a = router.close(a)                     # frees the survivor
+        assert r_a.item() == local.close(la).item()
+        for blk in blocks_b[3:]:
+            router.feed(b, blk)                   # first op re-places it
+            local.feed(lb, blk)
+        assert router.status(b) == "active"
+        r_b, lr_b = router.close(b), local.close(lb)
+        assert r_b.item() == lr_b.item()
+        assert np.asarray(r_b.count).dtype == np.asarray(lr_b.count).dtype
+
+
+# --------------------------------------------------------------------------
+# ClusterServer front door
+# --------------------------------------------------------------------------
+def test_cluster_server_serve_streams_matches_local(tmp_path):
+    """The ``TriangleServer``-shaped front door over spawn-spec workers:
+    ``serve_streams`` returns per-request results bit-identical to the
+    in-process multiplexer."""
+    from repro.serve.serve_loop import ClusterServer
+
+    reqs = [(256, _blocks(256, 0.05, seed=80 + i)) for i in range(4)]
+    with ClusterServer([{"memory_bytes": 40_000}, {"memory_bytes": 40_000}],
+                       checkpoint_dir=str(tmp_path)) as srv:
+        got = srv.serve_streams(reqs, block_size=BS)
+        st = srv.stats()
+    local = _local_oracle()
+    lids = [local.open(n, block_size=BS) for n, _ in reqs]
+    for (n, blocks), lid in zip(reqs, lids):
+        for blk in blocks:
+            local.feed(lid, blk)
+    want = [local.close(lid) for lid in lids]
+    assert [r.item() for r in got] == [r.item() for r in want]
+    assert {r.stats["worker"] for r in got} == {0, 1}  # really spread out
+    assert st["sessions"] == 0 and st["worker_deaths"] == 0

@@ -88,6 +88,35 @@ def test_front_door_docs_link_each_other():
     assert streaming, "docs/STREAMING.md links nothing back"
 
 
+def _read(rel: str) -> str:
+    with open(os.path.join(ROOT, rel), encoding="utf-8") as f:
+        return f.read()
+
+
+def test_architecture_documents_multi_host_tier():
+    """docs/ARCHITECTURE.md must keep the §Multi-host tier contract: the
+    placement rule, the wire protocol framing, and the migration/failover
+    state machine that tests/test_cluster_serving.py exercises."""
+    arch = _read("docs/ARCHITECTURE.md")
+    assert "## Multi-host tier" in arch
+    for sub in ("### Placement rule", "### Wire protocol",
+                "### Migration and failover state machine"):
+        assert sub in arch, f"ARCHITECTURE.md lost section {sub!r}"
+    for term in ("place_session", "least loaded", "__arrays__",
+                 "WorkerDied", "journal", "displaced", "ClusterServer"):
+        assert term in arch, f"ARCHITECTURE.md multi-host docs lost {term!r}"
+
+
+def test_readme_has_cluster_quickstart():
+    """README front door must show the cluster tier (and name the failure
+    modes a caller has to handle)."""
+    readme = _read("README.md")
+    assert "### Cluster quickstart" in readme
+    for term in ("ClusterServer", "migrate_stream", "checkpoint_stream",
+                 "BackpressureError"):
+        assert term in readme, f"README cluster quickstart lost {term!r}"
+
+
 def test_no_compiled_python_is_tracked():
     """__pycache__ sweep: stray .pyc like the once-committed
     tests/__pycache__/*.pyc must never land in the tree again."""

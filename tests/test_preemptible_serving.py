@@ -526,6 +526,79 @@ def test_checkpoint_store_put_all_is_transactional(tmp_path):
     assert len(store) == 0 and store.host_bytes == 0
 
 
+def _fresh_ckpts(counter, k, *, n=64, m=50, seed0=0):
+    out = []
+    for seed in range(seed0, seed0 + k):
+        s = counter.open_stream(n)
+        s.feed(_edges(n, m, seed))
+        out.append(s.checkpoint())
+    return out
+
+
+def test_checkpoint_store_evicts_lru_to_disk_before_raising(tmp_path):
+    """Host budget hit → the OLDEST-parked host-resident checkpoint spills
+    to disk (LRU order) and the newcomer takes its host slot; the store
+    raises only when the DISK budget refuses too — and then rolls the
+    attempted eviction back."""
+    counter = TriangleCounter()
+    cks = _fresh_ckpts(counter, 3)
+    one = cks[0].nbytes
+    store = CheckpointStore(2 * one, spill_dir=str(tmp_path / "sp"))
+    store.put(0, cks[0])
+    store.put(1, cks[1])
+    assert store.where(0) == "host" and store.where(1) == "host"
+    store.put(2, cks[2])                      # full: evict, don't raise
+    assert store.where(0) == "disk"           # LRU victim = oldest parked
+    assert store.where(1) == "host" and store.where(2) == "host"
+    assert store.n_evictions == 1 and store.n_spills == 1
+    assert cks[0].spilled and os.path.exists(cks[0].path)
+    assert store.host_bytes == 2 * one
+    assert store.spill_bytes == os.path.getsize(cks[0].path)
+    back = store.take(0)                      # disk entry restores fine
+    assert np.asarray(back.load_arrays()["count"]) is not None
+    assert store.spill_bytes == 0 and len(os.listdir(tmp_path / "sp")) == 0
+
+    # disk budget exhausted: the eviction is refused AND rolled back
+    more = _fresh_ckpts(counter, 2, seed0=10)
+    tight = CheckpointStore(one, spill_dir=str(tmp_path / "sp2"),
+                            spill_budget_bytes=1)
+    tight.put(0, more[0])
+    with pytest.raises(BackpressureError, match="checkpoint store full"):
+        tight.put(1, more[1])
+    assert tight.where(0) == "host" and not more[0].spilled
+    assert len(tight) == 1 and tight.spill_bytes == 0
+    assert os.listdir(tmp_path / "sp2") == []
+
+
+def test_spill_compression_charges_disk_bytes(tmp_path):
+    """Spill files are COMPRESSED .npz: a sparse stream's mostly-zero
+    bitset deflates well below ``nbytes``, the disk budget is charged the
+    real file size, and ``sched_stats`` reports the ratio."""
+    g0, g1 = (gen.gnp(256, 0.03, seed=s) for s in (40, 41))
+    mux = StreamMultiplexer(TriangleCounter(RES2), block_size=64,
+                            checkpoint_budget_bytes=10_000,
+                            spill_dir=str(tmp_path / "sp"))
+    a, b = mux.open(256), mux.open(256)
+    mux.feed(a, g0.edges)
+    mux.feed(b, g1.edges)
+    mux.preempt(a)
+    mux.preempt(b)                            # host full → one spills
+    (fname,) = os.listdir(tmp_path / "sp")
+    on_disk = os.path.getsize(tmp_path / "sp" / fname)
+    (sid_disk,) = [s for s in (a, b) if mux.store.where(s) == "disk"]
+    raw = mux.store._held[sid_disk][0].nbytes
+    assert mux.store.spill_bytes == on_disk   # compressed bytes charged
+    assert on_disk < mux.store.spill_raw_bytes == raw
+    st = mux.sched_stats
+    assert st["spills"] == 1
+    assert st["spill_disk_bytes"] == on_disk
+    assert st["spill_raw_bytes"] == raw
+    assert st["spill_compression"] > 2.0      # sparse bitsets deflate hard
+    assert mux.close(a).item() == count_triangles_brute(g0)
+    assert mux.close(b).item() == count_triangles_brute(g1)
+    assert mux.sched_stats["spill_compression"] == 1.0  # nothing live on disk
+
+
 # --------------------------------------------------------------------------
 # Checkpoint/restore on a real (forced host) 8-device mesh
 # --------------------------------------------------------------------------

@@ -63,6 +63,36 @@ WORKER = textwrap.dedent(
 )
 
 
+def timed_ms(fn, *, reps: int = 5, warmup: bool = True, sync=None):
+    """Standardized block-until-ready-then-stop-clock timing loop.
+
+    Runs ``fn()`` ``reps`` times; each sample's clock stops only after the
+    result is device-complete (``jax.block_until_ready`` on the output, or
+    on ``sync(output)`` when the arrays live inside wrapper objects such as
+    ``CountResult``). jax dispatches asynchronously, so timing without the
+    block measures dispatch latency, not the computation — every bench
+    timing loop must go through this helper or carry a reasoned
+    ``# lint: disable=R2`` (enforced by tools/repro_lint).
+
+    Returns ``(median_ms, last_output)`` so callers can verify correctness
+    once, outside the timed region.
+    """
+    import statistics
+    import time
+
+    import jax
+
+    if warmup:
+        jax.block_until_ready(sync(fn()) if sync else fn())
+    samples, out = [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(sync(out) if sync else out)
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(samples), out
+
+
 def run_job(spec: dict, timeout_s: float = 120.0) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC

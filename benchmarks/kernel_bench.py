@@ -203,7 +203,7 @@ def counter_bench(*, quick: bool = False, reps: int | None = None) -> list[dict]
     samples = []
     for g in graphs:
         t0 = time.perf_counter()
-        counter.count(g, plan=p).item()
+        counter.count(g, plan=p).item()  # lint: disable=R2 -- each iteration IS one latency sample; .item() is its stop-clock sync
         samples.append((time.perf_counter() - t0) * 1e3)
     records.append({
         "op": "triangle_counter", "shape": shape, "method": "counter_cache_hit",

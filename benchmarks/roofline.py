@@ -6,7 +6,6 @@ import json
 import os
 
 from repro.configs import get_config
-from repro.configs.shapes import shapes_for
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 

@@ -9,7 +9,7 @@ import sys
 
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
-from benchmarks import fig10_11_et_vm, fig12_13_cores, kernel_bench, roofline, table1_suite
+from benchmarks import fig10_11_et_vm, fig12_13_cores, kernel_bench, roofline, table1_suite  # noqa: E402
 
 
 def main() -> None:

@@ -34,6 +34,8 @@ import time
 import jax
 import numpy as np
 
+from common import timed_ms
+
 from repro.core import streaming
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -102,13 +104,14 @@ def bench_window(*, quick: bool = False, window: int | None = None,
         for b in streaming.padded_blocks([e], n, block):
             state = streaming.ingest_block_windowed(state, b)
     jax.block_until_ready(state["epochs"])
-    samples = []
-    for _ in range(max(reps * 4, 10)):
-        t0 = time.perf_counter()
-        state = streaming.expire_epoch(state)
-        jax.block_until_ready(state["epochs"])
-        samples.append((time.perf_counter() - t0) * 1e3)
-    ms_expire = statistics.median(samples)
+    cell = [state]  # expire chains: each sample slides the previous state
+
+    def expire_once():
+        cell[0] = streaming.expire_epoch(cell[0])
+        return cell[0]["epochs"]
+
+    ms_expire, _ = timed_ms(expire_once, reps=max(reps * 4, 10), warmup=False)
+    state = cell[0]
     records.append({
         "op": "stream_window", "shape": shape, "method": "expire_epoch",
         "median_ms": round(ms_expire, 3), "grid_steps": 1,

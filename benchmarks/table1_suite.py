@@ -3,7 +3,6 @@
 every counting path on each graph."""
 from __future__ import annotations
 
-import time
 
 import jax.numpy as jnp
 import numpy as np

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.planner import GraphStats, Plan, Resources, plan as plan_fn
-from repro.utils import count_dtype
 
 
 def bucket(x: int, minimum: int = 64) -> int:
@@ -298,7 +297,7 @@ class TriangleCounter:
         if block_size is None:
             block_size = p.block_size
         return StreamSession(self, n_nodes, p, block_size,
-                             self._mesh_matches(p.n_stages))
+                             self.mesh_matches(p.n_stages))
 
     def restore_stream(self, ckpt: SessionCheckpoint) -> "StreamSession":
         """Resume a checkpointed stream session — the other half of
@@ -321,7 +320,7 @@ class TriangleCounter:
 
         session = StreamSession(
             self, ckpt.n_nodes, ckpt.plan, ckpt.block_size,
-            self._mesh_matches(ckpt.plan.n_stages),
+            self.mesh_matches(ckpt.plan.n_stages),
             state=streaming.restore_state(ckpt.load_arrays()))
         session._buffer.import_shape_state(ckpt.buffer_shape)
         session.n_blocks = ckpt.n_blocks
@@ -531,7 +530,7 @@ class TriangleCounter:
                                interpret=p.interpret)
         blocks = jnp.asarray(blocks)
         key = (p.cache_key(), ("ring", p.n_stages, part.rows_per_stage))
-        if self._mesh_matches(p.n_stages):
+        if self.mesh_matches(p.n_stages):
             entry = self._entry(key, lambda e: self._mark_traced(
                 e, DynamicPipeline(self.mesh, self.mesh.axis_names[0]).jit(spec)))
             out = entry.fn(blocks, blocks)
@@ -554,7 +553,7 @@ class TriangleCounter:
         spec = bitset_ring_spec(use_kernel=p.use_kernel, interpret=p.interpret)
         masks, edges = jnp.asarray(masks), jnp.asarray(edges)
         key = (p.cache_key(), ("bitset", p.n_stages) + tuple(masks.shape) + tuple(edges.shape))
-        if self._mesh_matches(p.n_stages):
+        if self.mesh_matches(p.n_stages):
             entry = self._entry(key, lambda e: self._mark_traced(
                 e, DynamicPipeline(self.mesh, self.mesh.axis_names[0]).jit(spec)))
         else:
@@ -564,10 +563,13 @@ class TriangleCounter:
         return out, {"cache": self._cache_stats(key, entry),
                      "stage_costs": stage_costs(g, part).tolist()}
 
-    def _mesh_matches(self, n_stages: int) -> bool:
-        # shard_map requires leading dim == device count; any mismatch (e.g.
-        # the planner capped stages below the ring width for a tiny graph)
-        # falls back to the sequential chain emulation instead of failing.
+    def mesh_matches(self, n_stages: int) -> bool:
+        """True when this counter's mesh actually hosts a ``n_stages``-wide
+        ring — shard_map requires leading dim == device count; any mismatch
+        (e.g. the planner capped stages below the ring width for a tiny
+        graph) falls back to the sequential chain emulation instead of
+        failing. Admission logic branches on this: an emulated shard pays
+        the FULL bitset, so the per-stage discount only applies on-mesh."""
         return (self.mesh is not None and self.mesh.devices.size > 1
                 and self.mesh.devices.size == n_stages)
 

@@ -122,6 +122,14 @@ class Resources:
                    backend=jax.default_backend())
 
 
+# Plan fields that inform ADMISSION/LOGGING only and are excluded from
+# cache_key() on purpose: two plans differing only in these must share one
+# compiled function. repro_lint R6 enforces that every Plan field is either
+# in cache_key() or listed here, and R1/R6 reject reads of these fields
+# from compile-cache keys and executed paths.
+ADMISSION_ONLY = frozenset({"predicted_bytes", "predicted_cost", "reason"})
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """An inspectable, serializable execution plan.

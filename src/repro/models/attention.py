@@ -80,7 +80,6 @@ def gqa_prefill_cache(p, cfg: LMConfig, x, cos, sin, cache):
     hk, hd = cfg.n_kv_heads, cfg.hd
     k = apply_rotary(_split_heads(x @ p["wk"], hk, hd), cos, sin)
     v = _split_heads(x @ p["wv"], hk, hd)
-    s = x.shape[1]
     cache = dict(cache)
     cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2)
     cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)

@@ -9,7 +9,6 @@ against the same oracle.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

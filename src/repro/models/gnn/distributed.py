@@ -23,8 +23,6 @@ Correctness is differential-tested against the plain single-device models on
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

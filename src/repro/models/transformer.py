@@ -9,7 +9,6 @@ Entry points: init_params / forward / loss_fn / prefill / decode_step.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -96,9 +96,8 @@ def _handle(op, header, arrays, mux, res, mesh_devices, last_seq):
                        block_size=header.get("block_size"),
                        window=header.get("window"),
                        priority=int(header.get("priority") or 0))
-        rec = mux._recs[sid]
         return ({"ok": True, "sid": sid, "status": mux.status(sid),
-                 "state_bytes": rec.state_bytes}, None, False)
+                 "state_bytes": mux.state_bytes_of(sid)}, None, False)
     if op in ("feed", "advance"):
         sid, seq = int(header["sid"]), header.get("seq")
         if seq is not None and seq <= last_seq.get(sid, -1):
@@ -134,7 +133,7 @@ def _handle(op, header, arrays, mux, res, mesh_devices, last_seq):
         if header.get("seq") is not None:
             last_seq[sid] = int(header["seq"])
         return ({"ok": True, "sid": sid,
-                 "state_bytes": mux._recs[sid].state_bytes}, None, False)
+                 "state_bytes": mux.state_bytes_of(sid)}, None, False)
     if op == "close":
         sid = int(header["sid"])
         result = mux.close(sid)

@@ -114,11 +114,22 @@ class CheckpointStore:
     in the serving tier, but degrades through the cheap tier first.
     ``put_all`` is transactional: it places every checkpoint (and keeps
     every eviction) or rolls everything back, so a multi-victim preemption
-    never half-commits."""
+    never half-commits.
+
+    ``evict`` picks WHICH host-resident checkpoint spills first when the
+    host budget is hit: ``"lru"`` (default) walks parking order — the
+    session idle longest pays the restore-from-disk tax; ``"largest"``
+    spills the biggest host-resident snapshot first — fewest spill files
+    for the same freed bytes, the right trade when one whale session parks
+    among many smalls (and sparse whale bitsets are exactly what the
+    compressed ``.npz`` tier deflates best)."""
 
     def __init__(self, host_budget_bytes: int, *, spill_dir: str | None = None,
-                 spill_budget_bytes: int | None = None):
+                 spill_budget_bytes: int | None = None, evict: str = "lru"):
+        if evict not in ("lru", "largest"):
+            raise ValueError(f"evict must be 'lru' or 'largest', got {evict!r}")
         self.host_budget_bytes = int(host_budget_bytes)
+        self.evict = evict
         self.spill_dir = spill_dir
         if spill_budget_bytes is None:
             spill_budget_bytes = 4 * self.host_budget_bytes if spill_dir else 0
@@ -179,8 +190,7 @@ class CheckpointStore:
         try:
             for sid, ckpt in items:
                 while host_b + ckpt.nbytes > self.host_budget_bytes:
-                    vsid = next((s for s, h in self._held.items()
-                                 if h[1] == "host"), None)
+                    vsid = self._victim()
                     if vsid is None:
                         break
                     victim = self._held[vsid]
@@ -218,6 +228,17 @@ class CheckpointStore:
             host_b, spill_b, raw_b
         self.n_spills += n_spills
         self.n_evictions += n_evictions
+
+    def _victim(self) -> int | None:
+        """The next host-resident sid to evict to disk, per ``self.evict``
+        (None when nothing host-resident is left to spill)."""
+        hosts = [(s, h) for s, h in self._held.items() if h[1] == "host"]
+        if not hosts:
+            return None
+        if self.evict == "largest":
+            # ties break toward parking order, keeping evictions stable
+            return max(hosts, key=lambda sh: sh[1][2])[0]
+        return hosts[0][0]  # lru: dict order IS parking order
 
     def put(self, sid: int, ckpt) -> None:
         self.put_all([(sid, ckpt)])
@@ -279,6 +300,7 @@ class StreamMultiplexer:
                  checkpoint_budget_bytes: int | None = None,
                  spill_dir: str | None = None,
                  spill_budget_bytes: int | None = None,
+                 evict: str = "lru",
                  clock=time.monotonic):
         from repro.api import TriangleCounter
 
@@ -294,7 +316,8 @@ class StreamMultiplexer:
         self.store = CheckpointStore(
             checkpoint_budget_bytes if checkpoint_budget_bytes is not None
             else self.resources.memory_bytes,
-            spill_dir=spill_dir, spill_budget_bytes=spill_budget_bytes)
+            spill_dir=spill_dir, spill_budget_bytes=spill_budget_bytes,
+            evict=evict)
         self._clock = clock
         self._recs: dict[int, _Session] = {}    # every non-closed session
         self._results: dict[int, object] = {}   # sid -> CountResult
@@ -573,6 +596,17 @@ class StreamMultiplexer:
             raise KeyError(f"unknown session {sid}")
         return self._recs[sid].state
 
+    def state_bytes_of(self, sid: int) -> int:
+        """The session's planner-charged state bytes (what admission pinned
+        for an active session, or what readmission will re-pin for a parked
+        one) — the figure a router reconciles its per-worker ledger
+        against. 0 for a closed session."""
+        if sid in self._results:
+            return 0
+        if sid not in self._recs:
+            raise KeyError(f"unknown session {sid}")
+        return self._recs[sid].state_bytes
+
     def next_sid(self, candidates=None) -> int | None:
         """The scheduler's pick of which ACTIVE session a driver should feed
         next (``None`` if none are active). ``policy="fair"``: highest
@@ -638,7 +672,7 @@ class StreamMultiplexer:
         w = -(-ckpt.n_nodes // 32)
         per_stage = (max(p.window_epochs, 1) * 4 * ckpt.n_nodes
                      * -(-w // p.n_stages))
-        if p.n_stages > 1 and not self.counter._mesh_matches(p.n_stages):
+        if p.n_stages > 1 and not self.counter.mesh_matches(p.n_stages):
             return per_stage * p.n_stages
         return per_stage
 
@@ -660,7 +694,7 @@ class StreamMultiplexer:
                             window_epochs=window or 0, priority=priority,
                             actives=actives)
         if (adm.admitted and adm.plan.n_stages > 1
-                and not self.counter._mesh_matches(adm.plan.n_stages)):
+                and not self.counter.mesh_matches(adm.plan.n_stages)):
             adm = admit_session(
                 n_nodes, dataclasses.replace(self.resources, max_stages=1),
                 bytes_in_use=bytes_in_use, window_epochs=window or 0,

@@ -20,11 +20,12 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.utils import PropagatingThread
 
 
 def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -41,21 +42,25 @@ class CheckpointManager:
         self.dir = directory
         self.max_to_keep = max_to_keep
         os.makedirs(directory, exist_ok=True)
-        self._thread: threading.Thread | None = None
+        self._thread: PropagatingThread | None = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self.wait()  # one outstanding async save at a time
-        self._thread = threading.Thread(target=self._write, args=(step, host_tree))
+        self._thread = PropagatingThread(target=self._write,
+                                         args=(step, host_tree))
         self._thread.start()
         if blocking:
             self.wait()
 
     def wait(self) -> None:
+        """Join the outstanding async save. A write failure surfaces HERE
+        (PropagatingThread re-raises it) instead of dying silently on the
+        writer thread and leaving a stale "latest" checkpoint."""
         if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+            thread, self._thread = self._thread, None
+            thread.join()
 
     def _write(self, step: int, host_tree: Any) -> None:
         tmp = os.path.join(self.dir, f".tmp_step_{step}")

@@ -8,7 +8,7 @@ drivers jit.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,6 @@ from repro.models import transformer as tf
 from repro.models.gnn import dimenet, gin, graphcast, mace
 from repro.models.recsys import autoint
 from repro.train import optimizer as opt
-from repro.train.compression import compressed_psum
 
 
 # ---------------------------------------------------------------------------

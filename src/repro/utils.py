@@ -1,6 +1,8 @@
 """Small shared utilities."""
 from __future__ import annotations
 
+import threading
+
 import jax
 import jax.numpy as jnp
 
@@ -29,3 +31,23 @@ def count_dtype():
 def bytes_of(tree) -> int:
     leaves = jax.tree.leaves(tree)
     return sum(x.size * x.dtype.itemsize for x in leaves if hasattr(x, "dtype"))
+
+
+class PropagatingThread(threading.Thread):
+    """``threading.Thread`` that re-raises the target's exception on
+    ``join()`` instead of letting it die with the thread — a bare Thread
+    turns a failed async checkpoint write into a silent no-op, which is
+    exactly the failure mode repro_lint's R5 exists to catch."""
+
+    def run(self):
+        self._exc = None
+        try:
+            super().run()
+        except BaseException as e:  # re-raised on join — nothing is lost
+            self._exc = e
+
+    def join(self, timeout=None):
+        super().join(timeout)
+        exc, self._exc = getattr(self, "_exc", None), None
+        if exc is not None:
+            raise exc

@@ -1,0 +1,27 @@
+"""R1 true positives: traced branch, admission-only cache key, jit-in-loop."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ingest_block(state, edges):
+    keep = edges[:, 0] >= 0
+    if keep.sum() > 0:  # BAD R1a: Python branch on a traced value
+        state = state + 1
+    return state
+
+
+def build_cache(plans, n):
+    cache = {}
+    for p in plans:
+        key = (p.reason, n)  # BAD R1b: admission-only field in a cache key
+        cache[key] = p
+    return cache
+
+
+def per_call_jit(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda v: jnp.sum(v))  # BAD R1c: jit built per iteration
+        out.append(f(x))
+    return out

@@ -1,0 +1,27 @@
+"""R1 true negatives: static branches, shape-derived sizing, proper keys."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def ingest_block(state, edges, use_kernel):
+    n = state.shape[0]  # shape read: static under tracing
+    if use_kernel:  # OK: static argument
+        state = state * 2
+    if n > 128:  # OK: shape-derived, not traced
+        state = state + 1
+    mask = jnp.where(edges[:, 0] >= 0, 1, 0)  # OK: traced select, no branch
+    return state + mask.sum()
+
+
+_JITTED = jax.jit(lambda v: jnp.sum(v))  # OK: jit hoisted to module scope
+
+
+def build_cache(plans, n):
+    cache = {}
+    for p in plans:
+        key = (p.cache_key(), n)  # OK: routed through cache_key()
+        cache[key] = p
+    return cache

@@ -1,0 +1,18 @@
+"""R2 true positives: device syncs inside interleave-style loops."""
+import jax
+import numpy as np
+
+
+def drive(sessions):
+    totals = []
+    for s in sessions:
+        r = s.step()
+        totals.append(r.item())  # BAD: per-iteration device sync
+    return totals
+
+
+def drain(queue):
+    while queue:
+        x = queue.pop()
+        jax.block_until_ready(x)  # BAD: sync in the hot loop
+        np.asarray(jax.device_get(x))  # BAD: device_get per iteration

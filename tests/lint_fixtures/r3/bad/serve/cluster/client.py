@@ -1,0 +1,12 @@
+"""R3 true positive: sends an op the worker has no handler for."""
+
+
+class Client:
+    def open(self, sock, n):
+        return self.rpc(sock, {"op": "open", "n_nodes": n})  # BAD: no handler
+
+    def hello(self, sock):
+        return self.rpc(sock, {"op": "hello"})  # OK: handled
+
+    def rpc(self, sock, header):
+        return header

@@ -1,0 +1,15 @@
+"""R3 true positive: the typed-error registry misses a raised type."""
+
+
+def raise_remote(header):
+    etype = header.get("etype", "RuntimeError")
+    msg = header.get("error", "worker error")
+    mapped = {
+        "ValueError": ValueError,
+        "KeyError": KeyError,
+        "RuntimeError": RuntimeError,
+        # BAD: BackpressureError raised worker-side but not registered
+    }.get(etype)
+    if mapped is not None:
+        raise mapped(msg)
+    raise RuntimeError(f"{etype}: {msg}")

@@ -1,0 +1,16 @@
+"""R3 bad-side worker: handles fewer ops than the client sends, and
+raises a type the protocol registry does not map."""
+
+
+class BackpressureError(RuntimeError):
+    pass
+
+
+def _handle(op, header, mux):
+    if op == "hello":
+        return {"ok": True}
+    if op in ("feed", "advance"):
+        if mux.full():
+            raise BackpressureError("queue budget exhausted")
+        return {"ok": True}
+    raise ValueError(f"unknown op {op!r}")

@@ -1,0 +1,12 @@
+"""R3 true negative: every sent op has a worker handler."""
+
+
+class Client:
+    def open(self, sock, n):
+        return self.rpc(sock, {"op": "open", "n_nodes": n})
+
+    def feed(self, sock, sid, edges):
+        return self.rpc(sock, {"op": "feed", "sid": sid}, edges)
+
+    def rpc(self, sock, header, arrays=None):
+        return header

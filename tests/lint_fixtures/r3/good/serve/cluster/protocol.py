@@ -1,0 +1,19 @@
+"""R3 true negative: registry covers every worker-raised type."""
+
+
+class BackpressureError(RuntimeError):
+    pass
+
+
+def raise_remote(header):
+    etype = header.get("etype", "RuntimeError")
+    msg = header.get("error", "worker error")
+    mapped = {
+        "BackpressureError": BackpressureError,
+        "ValueError": ValueError,
+        "KeyError": KeyError,
+        "RuntimeError": RuntimeError,
+    }.get(etype)
+    if mapped is not None:
+        raise mapped(msg)
+    raise RuntimeError(f"{etype}: {msg}")

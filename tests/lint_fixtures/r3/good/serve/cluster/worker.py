@@ -1,0 +1,16 @@
+"""R3 good-side worker: a handler for every op the client sends."""
+from tests.lint_fixtures.r3.good.serve.cluster.protocol import (  # noqa: F401
+    BackpressureError,
+)
+
+
+def _handle(op, header, mux):
+    if op == "hello":
+        return {"ok": True}
+    if op == "open":
+        return {"ok": True, "sid": mux.open(header["n_nodes"])}
+    if op in ("feed", "advance"):
+        if mux.full():
+            raise BackpressureError("queue budget exhausted")
+        return {"ok": True}
+    raise ValueError(f"unknown op {op!r}")

@@ -1,0 +1,28 @@
+"""R4 true positives: charge with no release, and a try-block leak."""
+
+
+class LeakyStore:
+    def __init__(self, budget):
+        self.budget = budget
+        self.host_bytes = 0  # BAD: charged below, never released anywhere
+
+    def put(self, ckpt):
+        self.host_bytes += ckpt.nbytes
+
+
+class TryLeakMux:
+    def __init__(self):
+        self.queue_bytes = 0
+
+    def buffer(self, rec, arr):
+        try:
+            self.queue_bytes += arr.nbytes  # BAD: raise below leaks charge
+            rec.blocks.append(self._validate(arr))
+        except ValueError:
+            pass  # swallowed, but queue_bytes keeps the charge
+
+    def drain(self, rec, arr):
+        self.queue_bytes -= arr.nbytes
+
+    def _validate(self, arr):
+        return arr

@@ -1,0 +1,41 @@
+"""R4 true negatives: paired charge/release, transactional commit."""
+
+
+class BalancedStore:
+    def __init__(self, budget):
+        self.budget = budget
+        self.host_bytes = 0
+
+    def put(self, ckpt):
+        self.host_bytes += ckpt.nbytes  # charge-last: nothing below raises
+
+    def take(self, ckpt):
+        self.host_bytes -= ckpt.nbytes
+
+
+class TransactionalMux:
+    def __init__(self):
+        self.queue_bytes = 0
+
+    def buffer_all(self, recs, arrs):
+        staged = self.queue_bytes  # mutate a LOCAL, commit once at the end
+        for rec, arr in zip(recs, arrs):
+            staged += arr.nbytes
+            rec.blocks.append(arr)
+        self.queue_bytes = staged
+
+    def release(self, rec):
+        self.queue_bytes = 0  # zero-reset counts as the release half
+
+
+class GuardedMux:
+    def __init__(self):
+        self.queue_bytes = 0
+
+    def buffer(self, rec, arr):
+        try:
+            self.queue_bytes += arr.nbytes
+            rec.blocks.append(arr)
+        except ValueError:
+            self.queue_bytes -= arr.nbytes  # OK: released on the exit path
+            raise

@@ -1,0 +1,17 @@
+"""R5 true positives: private reach-in from outside, bare Thread."""
+import threading
+
+
+def force_close(mux, sid):
+    rec = mux._recs.pop(sid)  # BAD: mutates mux internals from outside
+    return rec
+
+
+def spy(mux, sid):
+    return mux._recs[sid]  # BAD: even reads bypass the class's invariants
+
+
+def async_write(fn, payload):
+    t = threading.Thread(target=fn, args=(payload,))  # BAD: silent failures
+    t.start()
+    return t

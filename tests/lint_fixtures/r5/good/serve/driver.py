@@ -1,0 +1,16 @@
+"""R5 true negatives: public accessors, PropagatingThread."""
+from repro.utils import PropagatingThread
+
+
+def close_out(mux, sid):
+    return mux.close(sid)  # OK: the designated method
+
+
+def charged(mux, sid):
+    return mux.state_bytes_of(sid)  # OK: public accessor
+
+
+def async_write(fn, payload):
+    t = PropagatingThread(target=fn, args=(payload,))  # OK: join re-raises
+    t.start()
+    return t

@@ -1,0 +1,8 @@
+"""R6 true positive: an executed path reads an admission-only field."""
+from tests.lint_fixtures.r6.bad.api.planner import Plan
+
+
+def _run_stream(state, edges, p: Plan):
+    if p.reason:  # BAD: admission-only metadata steering execution
+        return state
+    return state + edges.sum()

@@ -1,0 +1,13 @@
+"""R6 true positives: unclassified Plan field, no ADMISSION_ONLY."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    method: str
+    block_size: int = 65536
+    fused_ingest: bool = False  # BAD: execution knob missing from the key
+    reason: str = ""  # BAD: not in cache_key and no ADMISSION_ONLY declared
+
+    def cache_key(self):
+        return (self.method, self.block_size)

@@ -1,0 +1,8 @@
+"""R6 true negative: executed path reads only cache-keyed fields."""
+from tests.lint_fixtures.r6.good.api.planner import Plan
+
+
+def _run_stream(state, edges, p: Plan):
+    if p.block_size > len(edges):  # OK: block_size is in cache_key()
+        return state
+    return state + edges.sum()

@@ -1,0 +1,15 @@
+"""R6 true negative: cache_key + ADMISSION_ONLY partition the fields."""
+import dataclasses
+
+ADMISSION_ONLY = frozenset({"predicted_bytes", "reason"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    method: str
+    block_size: int = 65536
+    predicted_bytes: int = 0
+    reason: str = ""
+
+    def cache_key(self):
+        return (self.method, self.block_size)

@@ -18,8 +18,10 @@ The acceptance pins for the cluster PR live here:
   planner's independently recomputed predictions, and returns to zero
   after close/migrate (`test_router_ledger_matches_planner_predictions`).
 """
+import json
 import os
 import socket
+import struct
 
 import numpy as np
 import pytest
@@ -103,6 +105,93 @@ def test_protocol_remote_errors_keep_their_type():
     with pytest.raises(RuntimeError, match="SomethingOdd"):
         protocol.raise_remote({"ok": False, "etype": "SomethingOdd",
                                "error": "?"})
+
+
+def test_protocol_oversized_frame_rejected_before_alloc():
+    """A length prefix past MAX_FRAME_BYTES is a typed ProtocolError raised
+    BEFORE any payload read — a corrupt prefix must not turn into a 4 GiB
+    recv loop (a hang) or a bad alloc."""
+    a, b = socket.socketpair()
+    a.sendall(struct.pack(">I", protocol.MAX_FRAME_BYTES + 1))
+    with pytest.raises(protocol.ProtocolError, match="corrupt length"):
+        protocol.recv_msg(b)
+    a.close(), b.close()
+
+
+def test_protocol_torn_frame_header_overrun():
+    """A frame whose inner header length runs past the frame itself (torn
+    or corrupted mid-stream) is a typed ProtocolError, not a json blow-up
+    on garbage bytes."""
+    a, b = socket.socketpair()
+    payload = struct.pack(">I", 500) + b"x" * 8  # claims 500 B of header in a 12 B frame
+    a.sendall(struct.pack(">I", len(payload)) + payload)
+    with pytest.raises(protocol.ProtocolError, match="overruns"):
+        protocol.recv_msg(b)
+    a.close(), b.close()
+
+
+def test_protocol_truncated_payload_is_worker_died_not_hang():
+    """A peer that dies after the prefix but mid-payload surfaces as
+    WorkerDied the moment the socket closes — recv_exact must not spin
+    waiting for bytes that will never come."""
+    a, b = socket.socketpair()
+    a.sendall(struct.pack(">I", 100) + b"x" * 10)  # 90 B never arrive
+    a.close()
+    with pytest.raises(WorkerDied, match="mid-message"):
+        protocol.recv_msg(b)
+    b.close()
+
+
+def test_protocol_malformed_arrays_manifest_rejected():
+    """An ``__arrays__`` manifest promising more buffer bytes than the
+    frame carries is a typed ProtocolError — np.frombuffer must never read
+    outside the payload it was handed."""
+    a, b = socket.socketpair()
+    head = json.dumps({"op": "feed", "sid": 0,
+                       "__arrays__": [["edges", "<i4", [1 << 20, 2]]]}
+                      ).encode()
+    payload = struct.pack(">I", len(head)) + head  # 8 MiB promised, 0 sent
+    a.sendall(struct.pack(">I", len(payload)) + payload)
+    with pytest.raises(protocol.ProtocolError, match="overruns the frame"):
+        protocol.recv_msg(b)
+    a.close(), b.close()
+
+
+def test_worker_unknown_op_is_typed_error_and_worker_survives():
+    """An unknown op crosses back as the worker's ValueError — and the
+    worker keeps serving afterwards: one malformed request must not take
+    down every session parked on that process."""
+    w = WorkerClient.spawn(memory_bytes=1 << 26, block_size=BS)
+    try:
+        with pytest.raises(ValueError, match="unknown op"):
+            w.rpc({"op": "frobnicate"})
+        reply, _ = w.rpc({"op": "ping"})  # still alive, still typed
+        assert reply["ok"] is True and w.alive
+        # a worker-side KeyError (unknown sid) also survives the trip
+        with pytest.raises(KeyError, match="unknown session"):
+            w.rpc({"op": "status", "sid": 12345})
+        assert w.alive
+    finally:
+        w.shutdown()
+
+
+def test_worker_garbage_frame_is_worker_died_never_hang():
+    """Raw garbage on the worker socket (a frame recv_msg rejects) kills
+    that connection: the worker's serve loop cannot parse a reply address
+    out of it, so the client sees WorkerDied promptly instead of waiting
+    forever on a reply that will never come."""
+    w = WorkerClient.spawn(memory_bytes=1 << 26, block_size=BS)
+    try:
+        head = json.dumps({"op": "ping",
+                           "__arrays__": [["edges", "<i4", [1 << 20, 2]]]}
+                          ).encode()
+        payload = struct.pack(">I", len(head)) + head
+        w.sock.sendall(struct.pack(">I", len(payload)) + payload)
+        with pytest.raises(WorkerDied):
+            w.rpc({"op": "ping"})
+        assert not w._alive  # client marked the connection dead
+    finally:
+        w.kill()
 
 
 # --------------------------------------------------------------------------

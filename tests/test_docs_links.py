@@ -11,7 +11,6 @@ import os
 import re
 import subprocess
 
-import pytest
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 

@@ -3,7 +3,6 @@ and finiteness assertions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.graphs import generators as gen

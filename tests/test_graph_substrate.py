@@ -1,7 +1,6 @@
 """Property tests for the graph substrate (generators, formats, partitioner,
 sampler, data pipeline determinism)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import ring_partition, stage_costs

@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import get_config, get_smoke
 from repro.models.transformer import (
-    cache_init,
     decode_step,
     forward,
     init_params,

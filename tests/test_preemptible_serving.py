@@ -570,6 +570,47 @@ def test_checkpoint_store_evicts_lru_to_disk_before_raising(tmp_path):
     assert os.listdir(tmp_path / "sp2") == []
 
 
+def test_checkpoint_store_eviction_policy_knob(tmp_path):
+    """``evict="largest"`` spills the BIGGEST host-resident checkpoint when
+    the host budget is hit, ``evict="lru"`` the oldest-parked — and under
+    either policy every ledger stays balanced: host + disk charges match
+    the placements exactly and drain to zero (the runtime counterpart of
+    lint rule R4)."""
+    counter = TriangleCounter()
+    for policy, expect_disk in (("lru", 0), ("largest", 1)):
+        (small,) = _fresh_ckpts(counter, 1, n=64, m=50, seed0=60)
+        (big,) = _fresh_ckpts(counter, 1, n=256, m=300, seed0=61)
+        (new,) = _fresh_ckpts(counter, 1, n=64, m=50, seed0=62)
+        assert big.nbytes > small.nbytes == new.nbytes
+        store = CheckpointStore(big.nbytes + small.nbytes,
+                                spill_dir=str(tmp_path / f"sp-{policy}"),
+                                evict=policy)
+        store.put(0, small)   # parked first -> the LRU victim
+        store.put(1, big)     # the largest -> the "largest" victim
+        store.put(2, new)     # over budget: someone must spill
+        assert store.where(expect_disk) == "disk"
+        assert [s for s in (0, 1) if s != expect_disk] \
+            == [s for s in (0, 1) if store.where(s) == "host"]
+        assert store.where(2) == "host"
+        # ledgers balanced: charges match placements on both tiers
+        held = {s: store._held[s] for s in (0, 1, 2)}
+        assert store.host_bytes == sum(
+            h[2] for h in held.values() if h[1] == "host")
+        assert store.spill_bytes == sum(
+            h[2] for h in held.values() if h[1] == "disk")
+        assert store.spill_bytes == sum(
+            os.path.getsize(os.path.join(str(tmp_path / f"sp-{policy}"), f))
+            for f in os.listdir(tmp_path / f"sp-{policy}"))
+        for sid in (0, 1, 2):
+            store.take(sid).load_arrays()
+        assert store.host_bytes == 0 and store.spill_bytes == 0
+        assert store.spill_raw_bytes == 0 and len(store) == 0
+    with pytest.raises(ValueError, match="evict"):
+        CheckpointStore(1024, evict="random")
+    with pytest.raises(ValueError, match="evict"):
+        StreamMultiplexer(TriangleCounter(RES2), evict="mru")
+
+
 def test_spill_compression_charges_disk_bytes(tmp_path):
     """Spill files are COMPRESSED .npz: a sparse stream's mostly-zero
     bitset deflates well below ``nbytes``, the disk budget is charged the

@@ -1,0 +1,165 @@
+"""repro_lint's own acceptance suite.
+
+Three layers:
+
+- **fixtures** — every rule fires on its ``tests/lint_fixtures/<id>/bad``
+  tree and stays silent on ``good`` (deleting a rule's implementation
+  fails its bad-tree assertion here);
+- **engine mechanics** — suppression comments (mandatory reason, stale
+  detection), warn-vs-strict severity, CLI exit codes;
+- **the real tree** — ``src/`` must be clean under ``--strict``: the lint
+  gate IS a tier-1 test, so a refactor that reintroduces a host sync or a
+  ledger leak fails the suite even if no runtime pin catches it.
+"""
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.repro_lint import ALL_RULES, failures, run  # noqa: E402
+from tools.repro_lint.__main__ import main as lint_main  # noqa: E402
+
+FIXTURES = os.path.join(REPO, "tests", "lint_fixtures")
+
+
+def _run(tree, **kw):
+    return run([os.path.join(FIXTURES, tree)], ALL_RULES, **kw)
+
+
+def _rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- fixtures
+# rule id -> (expected finding count on bad tree, substrings that must each
+# appear in some bad-tree message)
+EXPECT_BAD = {
+    "R1": (3, ["data-dependent", "admission-only", "inside a loop"]),
+    "R2": (4, ["synchronizes the device", "device round-trip"]),
+    "R3": (2, ["no handler", "raise_remote's registry"]),
+    "R4": (2, ["never released", "leaks the charge"]),
+    "R5": (3, ["private internals", "threading.Thread"]),
+    "R6": (3, ["ADMISSION_ONLY", "executed path reads"]),
+}
+
+
+@pytest.mark.parametrize("rule_id", sorted(EXPECT_BAD))
+def test_rule_fires_on_bad_fixture(rule_id):
+    n_expected, substrings = EXPECT_BAD[rule_id]
+    findings = _run(f"{rule_id.lower()}/bad", strict=True)
+    mine = [f for f in findings if f.rule == rule_id]
+    assert len(mine) == n_expected, [f.render() for f in findings]
+    assert _rules_hit(findings) == {rule_id}, \
+        "bad trees must violate exactly their own rule"
+    joined = "\n".join(f.message for f in mine)
+    for s in substrings:
+        assert s in joined
+
+
+@pytest.mark.parametrize("rule_id", sorted(EXPECT_BAD))
+def test_rule_silent_on_good_fixture(rule_id):
+    findings = _run(f"{rule_id.lower()}/good", strict=True)
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_bad_findings_carry_file_and_line():
+    findings = _run("r1/bad", strict=True)
+    by_line = {f.line for f in findings}
+    assert by_line == {9, 17, 25}  # branch, cache key, jit-in-loop
+    assert all(f.path.endswith("core/streaming.py") for f in findings)
+
+
+# ------------------------------------------------------------- suppression
+def test_suppression_with_reason_silences_and_is_not_stale(tmp_path):
+    d = tmp_path / "serve"
+    d.mkdir()
+    (d / "sessions.py").write_text(
+        "def drive(xs):\n"
+        "    out = []\n"
+        "    for x in xs:\n"
+        "        out.append(x.item())"
+        "  # lint: disable=R2 -- bench timing sync\n"
+        "    return out\n")
+    assert run([str(tmp_path)], ALL_RULES, strict=True) == []
+
+
+def test_suppression_without_reason_is_itself_a_finding(tmp_path):
+    d = tmp_path / "serve"
+    d.mkdir()
+    (d / "sessions.py").write_text(
+        "def drive(xs):\n"
+        "    out = []\n"
+        "    for x in xs:\n"
+        "        out.append(x.item())  # lint: disable=R2\n"
+        "    return out\n")
+    findings = run([str(tmp_path)], ALL_RULES)
+    assert _rules_hit(findings) == {"SUP"}
+    assert "without a reason" in findings[0].message
+
+
+def test_stale_suppression_flagged_only_in_strict(tmp_path):
+    d = tmp_path / "serve"
+    d.mkdir()
+    (d / "sessions.py").write_text(
+        "X = 1  # lint: disable=R2 -- nothing to suppress here\n")
+    assert run([str(tmp_path)], ALL_RULES) == []
+    strict = run([str(tmp_path)], ALL_RULES, strict=True)
+    assert _rules_hit(strict) == {"SUP"}
+    assert "stale" in strict[0].message
+
+
+# ------------------------------------------------------- severity & strict
+def test_warn_advisory_unless_strict():
+    findings = _run("r4/bad")
+    warns = [f for f in findings if f.severity == "warn"]
+    assert len(warns) == 1 and "leaks the charge" in warns[0].message
+    assert warns[0] not in failures(findings)
+    assert len(failures(findings, strict=True)) == len(findings)
+    strict = _run("r4/bad", strict=True)
+    assert all(f.severity == "error" for f in strict)
+
+
+def test_select_runs_only_named_rules():
+    findings = _run("r1/bad", strict=True, select={"R2"})
+    assert findings == []
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_exit_codes(capsys):
+    assert lint_main([os.path.join(FIXTURES, "r5", "bad"), "--strict"]) == 1
+    out = capsys.readouterr().out
+    assert "R5" in out and "error(s)" in out
+    assert lint_main(["--list-rules"]) == 0
+    assert lint_main(["--select", "R99", "src"]) == 2
+
+
+def test_cli_src_is_clean_in_strict():
+    """The acceptance gate: the shipped tree lints clean. Any PR that
+    reintroduces a violation (or an unexplained suppression) fails
+    tier-1 right here."""
+    assert lint_main([os.path.join(REPO, "src"), "--strict"]) == 0
+
+
+def test_ruff_clean_when_available():
+    """`ruff check` under the pyproject config must pass. The container
+    this suite usually runs in does not ship ruff (and cannot install it),
+    so the test self-skips there; CI's lint job installs ruff and runs the
+    identical command, so the gate is enforced where it can be."""
+    if shutil.which("ruff") is None:
+        pytest.skip("ruff not installed in this environment")
+    r = subprocess.run(["ruff", "check", "."], cwd=REPO,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_benchmarks_clean_in_strict():
+    """Bench drive loops sync deliberately (TTFC, paired-timing) — every
+    such site carries a reasoned suppression, so the tree still lints
+    clean and NEW un-reasoned syncs fail."""
+    assert lint_main([os.path.join(REPO, "benchmarks"), "--strict"]) == 0

@@ -1,11 +1,10 @@
 """Streaming triangle counter + serving loop."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.api import TriangleCounter
-from repro.core.streaming import count_stream, ingest_block, init_state, ingest_trace_count
+from repro.core.streaming import count_stream, ingest_trace_count
 from repro.core.triangle_ref import count_triangles_brute
 from repro.data.pipeline import GraphStreamPipeline
 from repro.graphs import generators as gen

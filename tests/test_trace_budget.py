@@ -1,0 +1,102 @@
+"""Trace-budget regression pins for the serving tier.
+
+The static half of the retrace contract is R1 in ``tools/repro_lint``;
+this module is the dynamic half: it turns the ``traces`` counters
+(``streaming.ingest_trace_count()`` and ``TriangleCounter.cache_info``)
+into exact regression pins, so a change that silently starts recompiling
+per-session (a Python value smuggled into a jitted branch, an
+admission-only Plan field leaking into execution) fails tier-1 with a
+trace-count diff instead of a latency cliff in production.
+
+Every test uses node counts / block sizes unique to this module so the
+process-wide jit cache cannot hide a second trace behind an earlier
+test's compilation.
+"""
+import numpy as np
+
+from repro.core import streaming
+from repro.core.triangle_ref import count_triangles_brute
+from repro.graphs import generators as gen
+from repro.serve.sessions import StreamMultiplexer
+
+
+def _blocks(g, block):
+    return [g.edges[i:i + block] for i in range(0, g.n_edges, block)]
+
+
+def test_mux_sessions_share_one_trace_per_block_shape():
+    """N concurrent mux sessions, one block shape -> exactly ONE ingest
+    trace and ONE compile-cache entry, however many sessions ride it."""
+    n, block = 111, 27
+    graphs = [gen.gnp(n, 0.35, seed=90 + s) for s in range(3)]
+    mux = StreamMultiplexer(block_size=block)
+    before = streaming.ingest_trace_count()
+    sids = [mux.open(n) for _ in graphs]
+    for sid, g in zip(sids, graphs):
+        for b in _blocks(g, block):  # ragged tail pads to the same shape
+            mux.feed(sid, b)
+    results = [mux.close(sid) for sid in sids]
+    assert streaming.ingest_trace_count() - before == 1
+    for g, r in zip(graphs, results):
+        assert r.item() == count_triangles_brute(g)
+    info = mux.counter.cache_info
+    assert info["traces"] == 1
+    assert info["entries"] == 1
+    assert info["hits"] >= len(graphs) - 1  # every later open reused it
+
+
+def test_reopened_sessions_retrace_nothing():
+    """Second wave of sessions on a warm mux: trace delta must be ZERO."""
+    n, block = 113, 31
+    g = gen.gnp(n, 0.3, seed=7)
+    mux = StreamMultiplexer(block_size=block)
+    sid = mux.open(n)
+    for b in _blocks(g, block):
+        mux.feed(sid, b)
+    assert mux.close(sid).item() == count_triangles_brute(g)
+    traces0 = mux.counter.cache_info["traces"]
+    before = streaming.ingest_trace_count()
+    for seed in (11, 13):
+        g2 = gen.gnp(n, 0.3, seed=seed)
+        sid = mux.open(n)
+        for b in _blocks(g2, block):
+            mux.feed(sid, b)
+        assert mux.close(sid).item() == count_triangles_brute(g2)
+    assert streaming.ingest_trace_count() - before == 0
+    assert mux.counter.cache_info["traces"] == traces0
+
+
+def test_distinct_block_shapes_cost_exactly_one_trace_each():
+    """Two block sizes -> exactly two traces, not one per session. The pin
+    is EXACT on both sides: fewer would mean shape-mixing (a correctness
+    hazard), more would mean a retrace leak."""
+    n = 117
+    mux = StreamMultiplexer()
+    before = streaming.ingest_trace_count()
+    for block, seed in ((21, 1), (37, 2), (21, 3), (37, 4)):
+        g = gen.gnp(n, 0.3, seed=seed)
+        sid = mux.open(n, block_size=block)
+        for b in _blocks(g, block):
+            mux.feed(sid, b)
+        assert mux.close(sid).item() == count_triangles_brute(g)
+    assert streaming.ingest_trace_count() - before == 2
+
+
+def test_windowed_advance_is_trace_free():
+    """Sliding the window must not compile anything new: a windowed
+    session's whole life (open, feeds, advances, close) costs the same
+    single ingest trace as a plain one."""
+    n, block = 119, 25
+    g = gen.gnp(n, 0.3, seed=21)
+    bs = _blocks(g, block)
+    mux = StreamMultiplexer(block_size=block)
+    before = streaming.ingest_trace_count()
+    sid = mux.open(n, window=3)
+    for j, b in enumerate(bs):
+        mux.feed(sid, b)
+        if j % 2 == 1:
+            mux.advance(sid)
+    r = mux.close(sid)
+    delta = streaming.ingest_trace_count() - before
+    assert delta == 1, f"windowed session retraced: {delta} ingest traces"
+    assert int(np.asarray(r.count)) >= 0  # value checked by window suites

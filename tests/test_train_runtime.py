@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train import optimizer as opt
 from repro.train.checkpoint import CheckpointManager
@@ -63,7 +62,7 @@ def test_train_restart_exact_resume(tmp_path):
     from repro.launch.train import train_lm
 
     full = train_lm("yi_6b", steps=8, batch=2, seq=16, ckpt_dir=None, log_every=100)
-    part = train_lm("yi_6b", steps=4, batch=2, seq=16, ckpt_dir=str(tmp_path),
+    train_lm("yi_6b", steps=4, batch=2, seq=16, ckpt_dir=str(tmp_path),
                     ckpt_every=4, log_every=100)
     resumed = train_lm("yi_6b", steps=8, batch=2, seq=16, ckpt_dir=str(tmp_path),
                        ckpt_every=4, log_every=100)

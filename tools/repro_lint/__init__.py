@@ -1,0 +1,22 @@
+"""repro_lint — contract-enforcing static analysis for this repo.
+
+Usage::
+
+    python -m tools.repro_lint src/ --strict
+
+Six rules encode the invariants the serving tier's tests pin at runtime,
+so refactors hit them at lint time instead of in a bench regression:
+
+- R1 retrace hazards (traced branches, bad cache keys, jit-in-loop)
+- R2 host syncs inside hot loops
+- R3 cluster wire-protocol op/typed-error parity
+- R4 byte-ledger charge/release pairing
+- R5 shared-state discipline (private reach-ins, bare threads)
+- R6 Plan cache-key completeness
+
+See docs/ANALYSIS.md for the contract behind each rule.
+"""
+from tools.repro_lint.engine import Finding, Module, run, failures
+from tools.repro_lint.rules import ALL_RULES
+
+__all__ = ["Finding", "Module", "run", "failures", "ALL_RULES"]

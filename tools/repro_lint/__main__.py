@@ -1,0 +1,58 @@
+"""CLI: ``python -m tools.repro_lint [paths...] [--strict]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage error. ``--strict`` promotes
+warnings to errors and reports unexplained or stale suppressions —
+CI runs strict; a quick local pass can drop it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.repro_lint.engine import failures, run
+from tools.repro_lint.rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="contract-enforcing static analysis for this repo")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (default: src)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings fail; unexplained/stale suppressions fail")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id}  {rule.title}")
+        return 0
+    select = ({r.strip() for r in args.select.split(",") if r.strip()}
+              if args.select else None)
+    if select:
+        known = {r.id for r in ALL_RULES}
+        bad = select - known
+        if bad:
+            print(f"unknown rule id(s): {', '.join(sorted(bad))}",
+                  file=sys.stderr)
+            return 2
+
+    findings = run(args.paths or ["src"], ALL_RULES,
+                   strict=args.strict, select=select)
+    for f in findings:
+        print(f.render())
+    failing = failures(findings, strict=args.strict)
+    n_warn = len(findings) - len(failing)
+    if findings:
+        print(f"repro_lint: {len(failing)} error(s), {n_warn} warning(s)")
+    else:
+        print("repro_lint: clean")
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""Small AST helpers shared by the rules: dotted-name resolution, parent
+links, enclosing-context walks, and a shape-aware taint propagator for the
+retrace rule."""
+from __future__ import annotations
+
+import ast
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted(node.func)
+
+
+def add_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._lint_parent = parent  # type: ignore[attr-defined]
+
+
+def ancestors(node: ast.AST):
+    cur = getattr(node, "_lint_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_lint_parent", None)
+
+
+def in_loop(node: ast.AST) -> bool:
+    """True when ``node`` sits inside a for/while body of the SAME
+    function (a nested def resets the answer — its loops are its own)."""
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.For, ast.While)):
+            return True
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return False
+    return False
+
+
+def enclosing_function(node: ast.AST):
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def decorator_names(fn) -> list[str]:
+    out = []
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = dotted(dec.func)
+            # partial(jax.jit, ...) / functools.partial(jit, ...) count as
+            # the wrapped callable for jit detection
+            if name and name.split(".")[-1] == "partial" and dec.args:
+                inner = dotted(dec.args[0])
+                if inner:
+                    out.append(inner)
+            if name:
+                out.append(name)
+        else:
+            name = dotted(dec)
+            if name:
+                out.append(name)
+    return out
+
+
+def jit_static_argnames(fn) -> set[str]:
+    """static_argnames/static_argnums pulled from a jit decorator."""
+    static: set[str] = set()
+    params = [a.arg for a in fn.args.args]
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        static.add(el.value)
+            if kw.arg == "static_argnums":
+                for el in ast.walk(kw.value):
+                    if (isinstance(el, ast.Constant)
+                            and isinstance(el.value, int)
+                            and el.value < len(params)):
+                        static.add(params[el.value])
+    return static
+
+
+def is_jitted(fn) -> bool:
+    names = decorator_names(fn)
+    return any(n.split(".")[-1] == "jit" for n in names)
+
+
+_SHAPE_BREAKERS = {"shape", "ndim", "dtype", "size", "itemsize", "nbytes"}
+
+
+class TaintTracker(ast.NodeVisitor):
+    """Names derived from traced (non-static) jit parameters.
+
+    ``x.shape`` / ``x.ndim`` / ``x.dtype`` are static under tracing, so
+    assignments through them BREAK the taint — ``n = adj.shape[0]`` leaves
+    ``n`` untainted and ``if n > 8`` legal, while ``if keep.sum():`` on a
+    traced value is a retrace/ConcretizationError hazard."""
+
+    def __init__(self, fn, static: set[str]):
+        self.tainted: set[str] = {
+            a.arg for a in (fn.args.args + fn.args.kwonlyargs)
+            if a.arg not in static and a.arg not in ("self", "cls")}
+        # two passes: simple fixed-point over top-level assignments
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    if self.expr_tainted(node.value):
+                        for tgt in node.targets:
+                            self._taint_target(tgt)
+                elif isinstance(node, ast.AugAssign):
+                    if self.expr_tainted(node.value):
+                        self._taint_target(node.target)
+
+    def _taint_target(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, ast.Name):
+            self.tainted.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._taint_target(el)
+
+    def expr_tainted(self, expr: ast.AST) -> bool:
+        shielded: set[int] = set()
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Attribute) and node.attr in _SHAPE_BREAKERS:
+                # everything under x.shape / x.ndim / x.dtype is static
+                for sub in ast.walk(node):
+                    shielded.add(id(sub))
+        return any(isinstance(node, ast.Name) and node.id in self.tainted
+                   and id(node) not in shielded
+                   for node in ast.walk(expr))

@@ -1,0 +1,200 @@
+"""Rule engine for ``repro_lint``: file discovery, suppression comments,
+rule dispatch, and finding collection.
+
+The engine is deliberately small — the value is in the rules
+(``tools/repro_lint/rules/``), which encode THIS repo's contracts: the
+one-trace-per-shape compile-cache discipline, the planner byte ledgers,
+and the cluster wire protocol's op/error parity. Two rule shapes exist:
+
+- :class:`Rule` — sees one parsed module at a time (``check(module)``).
+- :class:`ProjectRule` — sees every scanned module at once
+  (``check_project(modules)``) for cross-file contracts like op parity.
+
+Suppression grammar (same line as the finding)::
+
+    x = r.item()  # lint: disable=R2 -- TTFC measurement needs the sync
+
+The reason after ``--`` is MANDATORY: a bare ``# lint: disable=R2`` is
+itself reported (rule id ``SUP``) — suppressions document why a contract
+does not apply, they never silently waive it. ``--strict`` additionally
+reports suppressions that matched nothing (stale waivers) and promotes
+``warn``-severity findings to failures.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=(?P<rules>[A-Za-z0-9_,\s]+?)"
+    r"(?:\s+--\s*(?P<reason>\S.*))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One reported violation, anchored to a file and line."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    severity: str = "error"  # "error" | "warn"
+
+    def render(self) -> str:
+        sev = "" if self.severity == "error" else f" [{self.severity}]"
+        return f"{self.path}:{self.line}: {self.rule}{sev} {self.message}"
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rules: tuple[str, ...]  # rule ids, or ("all",)
+    reason: str | None
+    used: bool = False
+
+    def covers(self, rule_id: str) -> bool:
+        return "all" in self.rules or rule_id in self.rules
+
+
+class Module:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.suppressions: dict[int, Suppression] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                rules = tuple(r.strip() for r in m.group("rules").split(",")
+                              if r.strip())
+                self.suppressions[i] = Suppression(i, rules, m.group("reason"))
+
+    def matches(self, patterns) -> bool:
+        """True when this module's repo-relative path matches any glob in
+        ``patterns`` (rules use this to scope themselves to hot modules)."""
+        return any(fnmatch.fnmatch(self.relpath, pat)
+                   or self.relpath.endswith(pat.lstrip("*"))
+                   for pat in patterns)
+
+
+class Rule:
+    """Per-module rule; subclasses set ``id``/``title`` and ``check``."""
+
+    id: str = ""
+    title: str = ""
+    scope: tuple[str, ...] = ("*",)  # relpath globs this rule applies to
+
+    def check(self, module: Module):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def applies(self, module: Module) -> bool:
+        return module.matches(self.scope)
+
+
+class ProjectRule(Rule):
+    """Cross-file rule; sees the whole scanned module set at once."""
+
+    def check_project(self, modules):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+def discover(paths, exclude=("lint_fixtures",)) -> list[str]:
+    """Every ``.py`` file under ``paths`` (files pass through verbatim),
+    sorted for stable output. ``lint_fixtures`` trees are skipped unless
+    named directly — fixtures VIOLATE the rules on purpose."""
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d not in exclude)
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def _relpath(path: str, roots) -> str:
+    """Path relative to whichever scan root contains it — rules scope on
+    this, so ``src/repro/core/streaming.py`` and a fixture tree's
+    ``core/streaming.py`` both read as ``*core/streaming.py``."""
+    ap = os.path.abspath(path)
+    for r in roots:
+        ar = os.path.abspath(r)
+        if ap.startswith(ar + os.sep):
+            rel = os.path.relpath(ap, ar)
+            return rel
+    return path
+
+
+def load_modules(paths) -> tuple[list[Module], list[Finding]]:
+    modules, findings = [], []
+    for f in discover(paths):
+        try:
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            modules.append(Module(f, _relpath(f, paths), src))
+        except SyntaxError as e:
+            findings.append(Finding("PARSE", f, e.lineno or 1,
+                                    f"syntax error: {e.msg}"))
+    return modules, findings
+
+
+def run(paths, rules, *, strict: bool = False,
+        select: set[str] | None = None) -> list[Finding]:
+    """Run ``rules`` over ``paths``; returns surviving findings (strict
+    adds unexplained/stale-suppression findings and promotes warns)."""
+    modules, findings = load_modules(paths)
+    for rule in rules:
+        if select and rule.id not in select:
+            continue
+        if isinstance(rule, ProjectRule):
+            findings.extend(rule.check_project(
+                [m for m in modules if rule.applies(m)]))
+        else:
+            for m in modules:
+                if rule.applies(m):
+                    findings.extend(rule.check(m))
+
+    by_path = {m.path: m for m in modules}
+    kept = []
+    for f in findings:
+        mod = by_path.get(f.path)
+        sup = mod.suppressions.get(f.line) if mod else None
+        if sup is not None and sup.covers(f.rule):
+            sup.used = True
+            continue
+        if strict and f.severity == "warn":
+            f = dataclasses.replace(f, severity="error")
+        kept.append(f)
+
+    for m in modules:
+        for sup in m.suppressions.values():
+            if sup.reason is None:
+                kept.append(Finding(
+                    "SUP", m.path, sup.line,
+                    "suppression without a reason — append "
+                    "'-- <why this line is exempt>'"))
+            elif strict and not sup.used:
+                kept.append(Finding(
+                    "SUP", m.path, sup.line,
+                    f"stale suppression: disable={','.join(sup.rules)} "
+                    f"matched no finding — remove it"))
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+def failures(findings, *, strict: bool = False) -> list[Finding]:
+    """The findings that should fail the run (non-strict keeps warns
+    advisory)."""
+    if strict:
+        return list(findings)
+    return [f for f in findings if f.severity == "error"]

@@ -1,0 +1,18 @@
+"""Rule registry: one instance of every shipped rule, id-ordered."""
+from tools.repro_lint.rules.cache_key import CacheKeyRule
+from tools.repro_lint.rules.host_sync import HostSyncRule
+from tools.repro_lint.rules.ledger import LedgerRule
+from tools.repro_lint.rules.protocol_parity import ProtocolParityRule
+from tools.repro_lint.rules.retrace import RetraceRule
+from tools.repro_lint.rules.shared_state import SharedStateRule
+
+ALL_RULES = [
+    RetraceRule(),
+    HostSyncRule(),
+    ProtocolParityRule(),
+    LedgerRule(),
+    SharedStateRule(),
+    CacheKeyRule(),
+]
+
+__all__ = ["ALL_RULES"]

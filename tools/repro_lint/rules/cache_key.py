@@ -1,0 +1,145 @@
+"""R6 — cache-key completeness.
+
+``TriangleCounter`` keys its compile cache on ``(Plan.cache_key(), shape
+bucket)``. That is only sound if every ``Plan`` field that can CHANGE
+EXECUTION is inside ``cache_key()`` — a field read by an executor but
+absent from the key means two different behaviours share one compiled
+function. Fields that only inform admission/logging are declared in
+``planner.ADMISSION_ONLY`` and must stay out of executed paths.
+
+Checks:
+
+- **R6a** the declaration itself: ``cache_key()``'s fields plus
+  ``ADMISSION_ONLY`` must exactly partition the ``Plan`` dataclass — a
+  new field added without classifying it fails the lint, which is the
+  whole point: the next sparse/hybrid/async PR cannot silently add an
+  execution knob the cache does not see.
+- **R6b** no function taking a ``Plan``-annotated parameter in an
+  executed-path module (counter / streaming / sessions) may read an
+  admission-only field from it.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.engine import Finding, ProjectRule
+
+_EXEC_MODULES = ("api/counter.py", "core/streaming.py", "serve/sessions.py")
+# fallback when the declaration is missing (itself an R6 finding): the
+# canonical admission-only set, so R6b still guards executed paths
+_DEFAULT_ADMISSION = frozenset({"predicted_bytes", "predicted_cost",
+                                "reason"})
+
+
+def _plan_decl(module):
+    """(fields, key_fields, admission_only, class_line) from planner.py."""
+    fields, key_fields, admission, line = None, None, None, 1
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "Plan":
+            line = node.lineno
+            fields = [s.target.id for s in node.body
+                      if isinstance(s, ast.AnnAssign)
+                      and isinstance(s.target, ast.Name)]
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef) \
+                        and sub.name == "cache_key":
+                    key_fields = [n.attr for n in ast.walk(sub)
+                                  if isinstance(n, ast.Attribute)
+                                  and isinstance(n.value, ast.Name)
+                                  and n.value.id == "self"]
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "ADMISSION_ONLY":
+                    admission = {el.value for el in ast.walk(node.value)
+                                 if isinstance(el, ast.Constant)
+                                 and isinstance(el.value, str)}
+    return fields, key_fields, admission, line
+
+
+def _plan_params(fn) -> set[str]:
+    """Parameter names annotated as Plan."""
+    out = set()
+    for a in fn.args.args + fn.args.kwonlyargs:
+        ann = a.annotation
+        name = None
+        if isinstance(ann, ast.Name):
+            name = ann.id
+        elif isinstance(ann, ast.Attribute):
+            name = ann.attr
+        elif isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            name = ann.value.split(".")[-1]
+        if name == "Plan":
+            out.add(a.arg)
+    return out
+
+
+class CacheKeyRule(ProjectRule):
+    id = "R6"
+    title = "cache-key completeness"
+    scope = ("*api/*.py", "*core/*.py", "*serve/*.py")
+
+    def check_project(self, modules):
+        planner = next((m for m in modules
+                        if m.relpath.endswith("api/planner.py")), None)
+        if planner is None:
+            return []
+        findings = []
+        fields, key_fields, admission, line = _plan_decl(planner)
+        if fields is None:
+            return []
+        if key_fields is None:
+            findings.append(Finding(
+                self.id, planner.path, line,
+                "Plan has no cache_key() method — the compile cache "
+                "cannot key on it"))
+            key_fields = []
+        declared = admission is not None
+        if not declared:
+            findings.append(Finding(
+                self.id, planner.path, line,
+                "planner module must declare ADMISSION_ONLY — the set of "
+                "Plan fields excluded from cache_key() on purpose"))
+            admission = set(_DEFAULT_ADMISSION)
+        for f in fields:
+            if f not in key_fields and f not in admission:
+                findings.append(Finding(
+                    self.id, planner.path, line,
+                    f"Plan field `{f}` is in neither cache_key() nor "
+                    f"ADMISSION_ONLY — classify it: execution knobs go in "
+                    f"the key, admission/logging metadata in "
+                    f"ADMISSION_ONLY"))
+        for f in set(key_fields) & admission:
+            findings.append(Finding(
+                self.id, planner.path, line,
+                f"Plan field `{f}` is in BOTH cache_key() and "
+                f"ADMISSION_ONLY — pick one"))
+        for f in list(key_fields) + (sorted(admission) if declared else []):
+            if f not in fields:
+                findings.append(Finding(
+                    self.id, planner.path, line,
+                    f"`{f}` is classified but is not a Plan field"))
+
+        if admission:
+            for m in modules:
+                if m.relpath.endswith(_EXEC_MODULES):
+                    findings.extend(self._exec_reads(m, admission))
+        return findings
+
+    def _exec_reads(self, module, admission):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            params = _plan_params(node)
+            if not params:
+                continue
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Attribute)
+                        and sub.attr in admission
+                        and isinstance(sub.value, ast.Name)
+                        and sub.value.id in params):
+                    yield Finding(
+                        self.id, module.path, sub.lineno,
+                        f"executed path reads admission-only Plan field "
+                        f"`.{sub.attr}` — if it changes execution it "
+                        f"belongs in cache_key(); if not, read it at "
+                        f"admission time instead")

@@ -1,0 +1,75 @@
+"""R2 — host sync in a hot path.
+
+The ingest/interleave/router loops are throughput paths: a ``.item()``,
+``jax.device_get``, ``block_until_ready``, or device→host ``np.asarray``
+inside one forces a device round-trip PER ITERATION and serializes jax's
+async dispatch (the serve bench's TTFC numbers assume feeds stay async
+until ``finalize``). Finalization and snapshot helpers are allowlisted —
+that is exactly where the sync belongs — as are the bench timing
+primitives (``median_ms`` et al.), whose contract IS
+block-until-ready-then-stop-clock. Anything else needs a
+``# lint: disable=R2 -- <why>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import astutil
+from tools.repro_lint.engine import Finding, Rule
+
+# method calls / callables that force a device→host sync
+_SYNC_METHODS = {"item", "block_until_ready"}
+_SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
+
+# functions whose JOB is to sync: result finalization, state snapshots
+# (checkpoint/restore must materialize host bytes), and the standardized
+# bench timing helpers in benchmarks/common.py
+_ALLOW_SUBSTRINGS = ("finalize", "snapshot", "spill", "load_arrays")
+_ALLOW_EXACT = {"median_ms", "_median_ms", "timed_ms", "sync", "wait",
+                "item", "to_host"}
+
+
+def _allowed(fn) -> bool:
+    if fn is None:
+        return False
+    name = fn.name
+    return (name in _ALLOW_EXACT
+            or any(s in name for s in _ALLOW_SUBSTRINGS))
+
+
+class HostSyncRule(Rule):
+    id = "R2"
+    title = "host sync in hot path"
+    scope = ("*serve/*.py", "*serve/cluster/*.py", "*core/streaming.py",
+             "*api/counter.py", "*benchmarks/*.py", "*bench*.py")
+
+    def check(self, module):
+        astutil.add_parents(module.tree)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call) or not astutil.in_loop(node):
+                continue
+            if _allowed(astutil.enclosing_function(node)):
+                continue
+            name = astutil.call_name(node)
+            if name in _SYNC_CALLS:
+                yield Finding(
+                    self.id, module.path, node.lineno,
+                    f"`{name}` inside a loop forces a device round-trip "
+                    f"per iteration — hoist it after the loop, or suppress "
+                    f"with a reason if this loop is a timing/finalize path")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS
+                    and not node.args and not node.keywords):
+                yield Finding(
+                    self.id, module.path, node.lineno,
+                    f"`.{node.func.attr}()` inside a loop synchronizes the "
+                    f"device every iteration — keep results as device "
+                    f"arrays until the loop ends (CountResult stays lazy "
+                    f"until .item())")
+            elif (name in ("np.asarray", "numpy.asarray", "onp.asarray")
+                    and node.args and isinstance(node.args[0], ast.Call)):
+                yield Finding(
+                    self.id, module.path, node.lineno,
+                    "np.asarray(<call result>) inside a loop likely "
+                    "materializes a device value to host per iteration — "
+                    "batch the transfer after the loop")

@@ -1,0 +1,113 @@
+"""R4 — byte-ledger pairing.
+
+Admission correctness rests on byte ledgers: the mux's ``bytes_in_use`` /
+``queue_bytes``, the router's per-worker ``_charged``, and the
+``CheckpointStore``'s ``host_bytes`` / ``spill_bytes``. The property
+tests pin "charged == Σ planner predictions, zero after close/migrate" at
+runtime; this rule pins the static half:
+
+- **R4a** any module that CHARGES a ledger attribute (``+=``) must also
+  RELEASE it (``-=`` or a zero-reset assignment) — a charge with no
+  release path anywhere is a guaranteed leak;
+- **R4b** a charge inside a ``try:`` body whose ``finally``/handlers
+  never release the same attribute is flagged as a warning: if a later
+  statement in the try raises, the charge leaks. The sanctioned patterns
+  are charge-last (nothing fallible after the ``+=``) or the
+  transactional shape ``put_all`` uses (mutate locals, commit once at the
+  end) — both sail through this rule untouched.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import astutil
+from tools.repro_lint.engine import Finding, Rule
+
+LEDGER_ATTRS = {"bytes_in_use", "queue_bytes", "host_bytes", "spill_bytes",
+                "spill_raw_bytes", "buffered_bytes", "journal_bytes",
+                "_charged"}
+
+
+def _ledger_attr(target) -> str | None:
+    """The ledger attr a mutation touches: ``x.attr`` or ``x.attr[...]``."""
+    if isinstance(target, ast.Subscript):
+        target = target.value
+    if isinstance(target, ast.Attribute) and target.attr in LEDGER_ATTRS:
+        return target.attr
+    return None
+
+
+def _is_zero_reset(node: ast.Assign) -> set[str]:
+    """Attrs this assignment resets to a constant (release-equivalent)."""
+    out = set()
+    for tgt in node.targets:
+        tgts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) else [tgt]
+        for t in tgts:
+            attr = _ledger_attr(t)
+            if attr:
+                out.add(attr)
+    return out
+
+
+class LedgerRule(Rule):
+    id = "R4"
+    title = "ledger charge without release"
+    scope = ("*serve/*.py", "*serve/cluster/*.py", "*api/*.py")
+
+    def check(self, module):
+        astutil.add_parents(module.tree)
+        charges: dict[str, list[int]] = {}
+        releases: set[str] = set()
+        findings = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.AugAssign):
+                attr = _ledger_attr(node.target)
+                if attr is None:
+                    continue
+                if isinstance(node.op, ast.Add):
+                    charges.setdefault(attr, []).append(node.lineno)
+                    findings.extend(self._try_leak(module, node, attr))
+                elif isinstance(node.op, ast.Sub):
+                    releases.add(attr)
+            elif isinstance(node, ast.Assign):
+                fn = astutil.enclosing_function(node)
+                if fn is not None and fn.name == "__init__":
+                    continue  # initialization is not a release path
+                releases.update(_is_zero_reset(node))
+        for attr, lines in charges.items():
+            if attr not in releases:
+                findings.append(Finding(
+                    self.id, module.path, lines[0],
+                    f"ledger `{attr}` is charged (+=) but never released "
+                    f"(-= or reset) in this module — every byte charged "
+                    f"against a budget needs a release on some exit path"))
+        return findings
+
+    def _try_leak(self, module, node, attr):
+        for anc in astutil.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+            if not isinstance(anc, ast.Try):
+                continue
+            in_body = any(node is s or any(node is d for d in ast.walk(s))
+                          for s in anc.body)
+            if not in_body:
+                return
+            protected = anc.finalbody + [s for h in anc.handlers
+                                         for s in h.body]
+            for s in protected:
+                for sub in ast.walk(s):
+                    if (isinstance(sub, ast.AugAssign)
+                            and isinstance(sub.op, ast.Sub)
+                            and _ledger_attr(sub.target) == attr):
+                        return
+                    if (isinstance(sub, ast.Assign)
+                            and attr in _is_zero_reset(sub)):
+                        return
+            yield Finding(
+                self.id, module.path, node.lineno,
+                f"ledger `{attr}` charged inside a try: block with no "
+                f"release in finally/except — a raise after this line "
+                f"leaks the charge (charge last, or release in finally)",
+                severity="warn")
+            return

@@ -1,0 +1,141 @@
+"""R3 — cluster protocol parity.
+
+The router and its workers share no code path at runtime — only the wire.
+Three tables must therefore agree by construction:
+
+- every ``{"op": ...}`` a client/router sends has a matching handler
+  branch in ``worker._handle`` (an unknown op is a typed ValueError, but a
+  MISSING handler for a shipped op is a deploy-time bug this rule catches
+  at lint time);
+- every exception type that worker-reachable code raises is registered in
+  ``protocol.raise_remote``'s typed-error map, so it re-raises as ITSELF
+  on the router side (``BackpressureError`` must stay catchable as
+  ``BackpressureError`` across the wire — placement logic depends on it);
+- the registry itself only maps real exception names.
+
+This is a project rule: it reads the client, worker, and protocol modules
+together and diffs the tables.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import astutil
+from tools.repro_lint.engine import Finding, ProjectRule
+
+# modules whose raises can surface inside a worker op handler (the worker
+# wraps them into {"ok": False, "etype"} replies)
+_WORKER_REACHABLE = ("serve/sessions.py", "api/counter.py",
+                     "api/planner.py", "core/streaming.py",
+                     "serve/cluster/worker.py")
+# transport-level/local types that never ride the {"ok": False} path
+_TRANSPORT = {"WorkerDied", "ProtocolError", "SystemExit", "StopIteration"}
+
+
+def _find(modules, suffix):
+    for m in modules:
+        if m.relpath.endswith(suffix):
+            return m
+    return None
+
+
+def _sent_ops(module):
+    """(op, lineno) for every ``{"op": <const>}`` dict literal."""
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if (isinstance(k, ast.Constant) and k.value == "op"
+                        and isinstance(v, ast.Constant)
+                        and isinstance(v.value, str)):
+                    yield v.value, node.lineno
+
+
+def _handled_ops(module):
+    """op strings compared against in the worker's dispatch."""
+    ops = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Compare):
+            names = {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+            if "op" not in names:
+                continue
+            for comp in [node.left, *node.comparators]:
+                if isinstance(comp, ast.Constant) and isinstance(comp.value, str):
+                    ops.add(comp.value)
+                if isinstance(comp, (ast.Tuple, ast.List, ast.Set)):
+                    ops.update(el.value for el in comp.elts
+                               if isinstance(el, ast.Constant)
+                               and isinstance(el.value, str))
+    return ops
+
+
+def _registry(module):
+    """Exception names keyed in raise_remote's typed-error dict."""
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "raise_remote":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Dict):
+                    return {k.value for k in sub.keys
+                            if isinstance(k, ast.Constant)
+                            and isinstance(k.value, str)}, node.lineno
+    return None, 1
+
+
+def _raised(module):
+    """(exception name, lineno) for every ``raise Name(...)``."""
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Raise) and isinstance(node.exc, ast.Call):
+            name = astutil.dotted(node.exc.func)
+            if name:
+                yield name.split(".")[-1], node.lineno
+
+
+class ProtocolParityRule(ProjectRule):
+    id = "R3"
+    title = "cluster protocol parity"
+    scope = ("*serve/*", "*api/*", "*core/*", "*cluster/*")
+
+    def check_project(self, modules):
+        worker = _find(modules, "cluster/worker.py")
+        protocol = _find(modules, "cluster/protocol.py")
+        if worker is None and protocol is None:
+            return []  # not scanning the cluster tier
+        findings = []
+
+        if worker is not None:
+            handled = _handled_ops(worker)
+            senders = [m for m in modules
+                       if m.relpath.endswith(("cluster/client.py",
+                                              "cluster/router.py"))]
+            for m in senders:
+                for op, line in _sent_ops(m):
+                    if op not in handled:
+                        findings.append(Finding(
+                            self.id, m.path, line,
+                            f"client sends op {op!r} but the worker's "
+                            f"dispatch has no handler for it — the RPC "
+                            f"would fail as 'unknown op' at runtime"))
+
+        if protocol is not None:
+            registered, reg_line = _registry(protocol)
+            if registered is None:
+                findings.append(Finding(
+                    self.id, protocol.path, reg_line,
+                    "protocol module has no raise_remote typed-error "
+                    "registry dict"))
+            else:
+                seen: set[str] = set()
+                for m in modules:
+                    if not m.relpath.endswith(_WORKER_REACHABLE):
+                        continue
+                    for name, line in _raised(m):
+                        if (name in registered or name in _TRANSPORT
+                                or name in seen):
+                            continue
+                        seen.add(name)
+                        findings.append(Finding(
+                            self.id, m.path, line,
+                            f"`{name}` is raised in worker-reachable code "
+                            f"but missing from raise_remote's registry — "
+                            f"it would cross the wire as a generic "
+                            f"RuntimeError and break typed catches"))
+        return findings

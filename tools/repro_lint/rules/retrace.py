@@ -1,0 +1,112 @@
+"""R1 — retrace hazards.
+
+The whole serving tier leans on "one ingest trace per block shape"
+(pinned by ``streaming.ingest_trace_count`` and the serve benches). Three
+statically-visible ways to break it:
+
+- **R1a** a Python ``if``/``while`` whose test depends on a TRACED jit
+  parameter: under tracing that is a ``ConcretizationTypeError`` at best,
+  and with ``static_argnames`` misuse a silent per-value retrace at
+  worst. Shape reads (``x.shape`` / ``x.ndim`` / ``x.dtype``) are static
+  and break the taint, so sizing branches stay legal.
+- **R1b** a compile-cache key built from an admission-only ``Plan``
+  field (``predicted_bytes`` / ``predicted_cost`` / ``reason``): two
+  equivalent plans with different log strings would miss the cache and
+  retrace. Keys must route through ``Plan.cache_key()``.
+- **R1c** ``jax.jit(...)`` called inside a loop: a fresh jit wrapper per
+  iteration defeats jax's own function cache and retraces every call.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import astutil
+from tools.repro_lint.engine import Finding, Rule
+
+# Plan fields that must never reach a compile-cache key (mirrors
+# planner.ADMISSION_ONLY — R6 checks the declaration itself).
+ADMISSION_ONLY = ("predicted_bytes", "predicted_cost", "reason")
+
+_KEYISH = ("key", "cache")
+
+
+class RetraceRule(Rule):
+    id = "R1"
+    title = "retrace hazard"
+
+    def check(self, module):
+        astutil.add_parents(module.tree)
+        findings = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and astutil.is_jitted(node):
+                findings.extend(self._jit_body(module, node))
+            if isinstance(node, ast.Call):
+                findings.extend(self._jit_in_loop(module, node))
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                findings.extend(self._cache_key(module, node))
+        return findings
+
+    # R1a ------------------------------------------------------------------
+    def _jit_body(self, module, fn):
+        static = astutil.jit_static_argnames(fn)
+        taint = astutil.TaintTracker(fn, static)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue  # nested defs get their own visit if jitted
+            test = None
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            if test is not None and taint.expr_tainted(test):
+                yield Finding(
+                    self.id, module.path, test.lineno,
+                    f"data-dependent Python branch on a traced value inside "
+                    f"jitted `{fn.name}` — branch with jnp.where/lax.cond, "
+                    f"or mark the argument static")
+
+    # R1b ------------------------------------------------------------------
+    def _cache_key(self, module, node):
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        keyish = False
+        for tgt in targets:
+            name = astutil.dotted(tgt)
+            if isinstance(tgt, ast.Subscript):
+                name = astutil.dotted(tgt.value)
+            if name and any(k in name.lower() for k in _KEYISH):
+                keyish = True
+        if not keyish:
+            return
+        hot = node.value if isinstance(node, ast.Assign) else node.value
+        for sub in ast.walk(hot):
+            if isinstance(sub, ast.Attribute) and sub.attr in ADMISSION_ONLY:
+                yield Finding(
+                    self.id, module.path, sub.lineno,
+                    f"cache key built from admission-only Plan field "
+                    f"`.{sub.attr}` — key on Plan.cache_key() instead "
+                    f"(equivalent plans with different {sub.attr!r} would "
+                    f"retrace)")
+        # keys stored INTO a cache: also inspect subscript key expressions
+        for tgt in targets:
+            if isinstance(tgt, ast.Subscript):
+                for sub in ast.walk(tgt.slice):
+                    if isinstance(sub, ast.Attribute) \
+                            and sub.attr in ADMISSION_ONLY:
+                        yield Finding(
+                            self.id, module.path, sub.lineno,
+                            f"cache subscript keyed by admission-only Plan "
+                            f"field `.{sub.attr}` — use Plan.cache_key()")
+
+    # R1c ------------------------------------------------------------------
+    def _jit_in_loop(self, module, call):
+        name = astutil.call_name(call)
+        if name is None or name.split(".")[-1] != "jit":
+            return
+        if astutil.in_loop(call):
+            yield Finding(
+                self.id, module.path, call.lineno,
+                "jax.jit(...) constructed inside a loop — every iteration "
+                "builds a fresh wrapper and retraces; hoist the jitted "
+                "callable out of the loop (or cache it)")

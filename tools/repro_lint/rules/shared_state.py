@@ -1,0 +1,97 @@
+"""R5 — shared-state discipline.
+
+Two contracts:
+
+- **R5a** the serving tier's stateful classes (``StreamMultiplexer``,
+  ``ClusterRouter``, ``CheckpointStore``, ``TriangleCounter``,
+  ``StreamSession``) own their underscore internals. Touching
+  ``mux._recs`` or ``counter._cache`` from ANOTHER module bypasses the
+  invariants those classes maintain (ledger symmetry, LRU order, compile
+  cache keying) — go through a public method, or add one. The rule
+  collects each watched class's private attributes/methods and flags any
+  ``<expr>._attr`` access (read or write) outside the defining module,
+  where ``<expr>`` is not ``self``/``cls``.
+- **R5b** bare ``threading.Thread`` swallows worker exceptions: the
+  thread dies, ``join()`` returns None, and the failure is silent (the
+  async checkpoint writer lost write errors exactly this way). Use
+  ``repro.utils.PropagatingThread``, which re-raises on ``join()``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import astutil
+from tools.repro_lint.engine import Finding, ProjectRule
+
+WATCHED_CLASSES = {"StreamMultiplexer", "ClusterRouter", "CheckpointStore",
+                   "TriangleCounter", "StreamSession"}
+# dunder-ish / universally generic names that would cause noise
+_GENERIC = {"_lint_parent", "__init__", "__dict__"}
+
+
+def _private_members(modules):
+    """attr/method name -> set of defining module paths, over the watched
+    classes only."""
+    owners: dict[str, set[str]] = {}
+    for m in modules:
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.ClassDef) \
+                    or node.name not in WATCHED_CLASSES:
+                continue
+            names: set[str] = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    names.add(sub.name)
+                if isinstance(sub, ast.Attribute) \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id == "self":
+                    names.add(sub.attr)
+            for name in names:
+                if name.startswith("_") and not name.startswith("__") \
+                        and name not in _GENERIC:
+                    owners.setdefault(name, set()).add(m.path)
+    return owners
+
+
+class SharedStateRule(ProjectRule):
+    id = "R5"
+    title = "shared-state discipline"
+    scope = ("*",)
+
+    def check_project(self, modules):
+        owners = _private_members(modules)
+        findings = []
+        for m in modules:
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.Attribute):
+                    findings.extend(self._private_access(m, node, owners))
+                if isinstance(node, ast.Call):
+                    findings.extend(self._bare_thread(m, node))
+        return findings
+
+    # R5a ------------------------------------------------------------------
+    def _private_access(self, module, node, owners):
+        attr = node.attr
+        if attr not in owners or module.path in owners[attr]:
+            return
+        if isinstance(node.value, ast.Name) and node.value.id in ("self", "cls"):
+            return
+        yield Finding(
+            self.id, module.path, node.lineno,
+            f"`{astutil.dotted(node) or '.' + attr}` reaches into a "
+            f"serving-tier class's private internals from outside its "
+            f"defining module — use (or add) a public accessor")
+
+    # R5b ------------------------------------------------------------------
+    def _bare_thread(self, module, call):
+        name = astutil.call_name(call)
+        if name is None:
+            return
+        last = name.split(".")[-1]
+        if last != "Thread" or name.endswith("PropagatingThread"):
+            return
+        yield Finding(
+            self.id, module.path, call.lineno,
+            "bare threading.Thread: exceptions in the target die with the "
+            "thread and join() hides them — use "
+            "repro.utils.PropagatingThread (re-raises on join)")

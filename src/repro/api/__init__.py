@@ -36,9 +36,11 @@ Plan method → paper section map:
 Streams are served concurrently through sessions:
 ``TriangleCounter.open_stream`` returns a ``StreamSession`` handle
 (open → feed blocks → finalize; ``count_stream`` is the one-session
-wrapper), ``admit_session`` budgets how many sessions' pinned bitset states
-(n²/8/S bytes each) fit ``Resources.memory_bytes`` — admit-dense vs
-admit-sharded vs preempt vs queue — and ``serve.StreamMultiplexer``
+wrapper), ``admit_session`` budgets how many sessions' pinned states fit
+``Resources.memory_bytes`` — admit-dense (n²/8 bitset) vs admit-sharded
+(n²/8/S per stage) vs admit-hybrid (the degree-aware hub-rows +
+tail-buffers layout, linear in n — ``hybrid_sizing``) vs preempt vs
+queue — and ``serve.StreamMultiplexer``
 interleaves block ingest across admitted sessions over one shared compile
 cache. Sessions are PREEMPTIBLE: ``StreamSession.checkpoint()`` snapshots
 the bitset/ring state to host memory as a ``SessionCheckpoint`` (spillable
@@ -58,7 +60,9 @@ from repro.api.planner import (
     Plan,
     Resources,
     WorkerLoad,
+    HybridSizing,
     admit_session,
+    hybrid_sizing,
     place_session,
     plan,
     plan_for_graph,
@@ -85,7 +89,9 @@ __all__ = [
     "Plan",
     "Resources",
     "WorkerLoad",
+    "HybridSizing",
     "admit_session",
+    "hybrid_sizing",
     "place_session",
     "plan",
     "plan_for_graph",

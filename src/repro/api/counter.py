@@ -152,6 +152,11 @@ class SessionCheckpoint:
             count = jnp.asarray(arrays["counts"].sum(
                 dtype=arrays["counts"].dtype))
         else:
+            if int(arrays.get("lost", 0)):
+                raise RuntimeError(
+                    f"hybrid stream checkpoint recorded "
+                    f"{int(arrays['lost'])} dropped edge endpoint(s) — its "
+                    f"count is not exact and cannot be finalized")
             count = jnp.asarray(arrays["count"])
         stats = {"n_blocks": self.n_blocks, "block_size": self.block_size,
                  "n_stages": p.n_stages, "sharded": p.n_stages > 1,
@@ -294,6 +299,14 @@ class TriangleCounter:
                 f"count_stream requires a plan with method='stream', got "
                 f"{p.method!r} — use count()/count_batch() for memory-resident "
                 f"plans, or drop the plan to let the planner size the stream")
+        if p.state_layout == "hybrid" and (p.window_epochs or p.n_stages > 1):
+            # the planner never emits these combinations; reject hand-built
+            # plans before they allocate a state no ingest path understands
+            raise ValueError(
+                "state_layout='hybrid' supports only unbounded single-stage "
+                f"streams (got window_epochs={p.window_epochs}, "
+                f"n_stages={p.n_stages}) — the windowed epoch ring and the "
+                "mesh stage axis stay bitset")
         if block_size is None:
             block_size = p.block_size
         return StreamSession(self, n_nodes, p, block_size,
@@ -388,6 +401,11 @@ class TriangleCounter:
         # fresh cache entry stands for at most one trace per fixed-shape
         # stream (see streaming.ingest_trace_count for the exact telemetry).
         entry.traces += 1
+        if p.state_layout == "hybrid":
+            # degree-aware hybrid state: hub bitset rows + tail buffers;
+            # hub_threshold is the jit-static promotion knob (in cache_key)
+            return _partial(streaming.ingest_block_hybrid,
+                            hub_threshold=p.hub_threshold)
         if p.window_epochs:
             if p.n_stages > 1:
                 if on_mesh:
@@ -633,7 +651,9 @@ class StreamSession:
 
     The handle owns this stream's state — the adjacency-so-far bitset
     (n²/8 bytes dense, n²/8/S per stage when the plan is ring-sharded; for a
-    windowed plan a ring of E epoch bitsets, E·n²/8 and E·n²/8/S) plus a
+    windowed plan a ring of E epoch bitsets, E·n²/8 and E·n²/8/S; for a
+    hybrid plan the degree-aware hub-row + tail-buffer arrays, linear in
+    n — see ``core.streaming.init_hybrid_state``) plus a
     :class:`~repro.core.streaming.BlockBuffer` that re-blocks ragged feeds to
     one fixed shape — and borrows everything compiled from the counter that
     opened it: many sessions over one counter share one compile cache, so S
@@ -674,6 +694,9 @@ class StreamSession:
             # restore path (TriangleCounter.restore_stream): adopt the
             # checkpointed arrays instead of allocating zeros
             self.state = state
+        elif plan.state_layout == "hybrid":
+            self.state = streaming.init_hybrid_state(
+                n_nodes, plan.hub_slots, plan.tail_capacity)
         elif plan.window_epochs:
             if plan.n_stages > 1:
                 self.state = streaming.init_windowed_sharded_state(
@@ -689,7 +712,7 @@ class StreamSession:
         # stage axis; the WHOLE array when the sharding is host-emulated —
         # emulation keeps all S shards on one device, so admission budgets
         # must charge all of them
-        nbytes = int(self._bitset_state().nbytes)
+        nbytes = self._state_nbytes()
         self.state_bytes = nbytes // plan.n_stages if on_mesh else nbytes
         self.n_blocks = 0
         self.n_epochs_advanced = 0
@@ -699,6 +722,15 @@ class StreamSession:
 
     def _bitset_state(self):
         return self.state["epochs" if self.plan.window_epochs else "adj"]
+
+    def _state_nbytes(self) -> int:
+        """Device bytes this session's state pins: the bitset array for the
+        dense/sharded/windowed layouts, the SUM over all hybrid arrays (hub
+        rows, hub maps, tail buffers, degrees, counters) — exactly
+        ``planner.hybrid_sizing``'s prediction, pinned by tests."""
+        if self.plan.state_layout == "hybrid":
+            return int(sum(v.nbytes for v in self.state.values()))
+        return int(self._bitset_state().nbytes)
 
     @property
     def closed(self) -> bool:
@@ -747,6 +779,11 @@ class StreamSession:
             self.state = self._entry.fn(self.state, tail)
             self.n_blocks += 1
         arrays = streaming.snapshot_state(self.state)
+        if int(np.asarray(arrays.get("lost", 0))):
+            raise RuntimeError(
+                f"refusing to checkpoint a hybrid session that dropped "
+                f"{int(np.asarray(arrays['lost']))} edge endpoint(s) — the "
+                f"snapshot would persist an inexact count")
         self._wall += time.perf_counter() - t0
         return SessionCheckpoint(
             n_nodes=self.n_nodes, plan=self.plan, block_size=self.block_size,
@@ -805,12 +842,23 @@ class StreamSession:
             self.n_blocks += 1
         self._wall += time.perf_counter() - t0
         p = self.plan
+        if p.state_layout == "hybrid":
+            # loud, not silent: a hybrid stream that exhausted its hub slots
+            # AND overflowed a tail buffer has dropped edge endpoints — its
+            # count is a lie, so finalize refuses to return one
+            lost = streaming.hybrid_lost(self.state)
+            if lost:
+                raise RuntimeError(
+                    f"hybrid stream dropped {lost} edge endpoint(s): "
+                    f"{p.hub_slots} hub slots exhausted while tail buffers "
+                    f"of {p.tail_capacity} overflowed — re-plan with larger "
+                    f"hub_slots/tail_capacity")
         count = (streaming.window_count(self.state) if p.window_epochs
                  else self.state["count"])
         stats = {"n_blocks": self.n_blocks, "block_size": self.block_size,
                  "n_stages": p.n_stages, "sharded": p.n_stages > 1,
                  "on_mesh": self._on_mesh, "session": True,
-                 "state_bytes": int(self._bitset_state().nbytes),
+                 "state_bytes": self._state_nbytes(),
                  "cache": {"key": self._key, "hit": self._cache_hit,
                            "traces": self._entry.traces},
                  "ingest_traces": streaming.ingest_trace_count() - self._traces0}

@@ -55,6 +55,22 @@ _STREAM_PENALTY = 3.0
 _STREAM_BLOCK_MIN = 4096
 _STREAM_BLOCK_MAX = 1 << 20
 _STREAM_BLOCK_MEM_FRACTION = 8
+# Hybrid (degree-aware) state sizing: tail buffers hold this many neighbor
+# slots per vertex (clamped around 8x the average degree when stats are
+# informative), hub rows start at this floor and grow to the memory budget.
+# Hybrid blocks are much smaller than bitset blocks because the block-local
+# phase-2 working set is O(B^2) int32, not O(B·W).
+_HYBRID_TAIL_MIN = 16
+_HYBRID_TAIL_MAX = 1024
+_HYBRID_TAIL_DEFAULT = 64
+_HYBRID_HUB_MIN = 64
+_HYBRID_BLOCK_MIN = 128
+_HYBRID_BLOCK_MAX = 8192
+
+
+def _pow2_at_least(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +166,15 @@ class Plan:
     node_batch: int = 256  # mapreduce reducer batch
     block_size: int = 65536  # streaming ingest block
     window_epochs: int = 0  # stream plans: sliding window of E epochs (0 = unbounded)
+    # Degree-aware hybrid stream state (state_layout="hybrid"): bitset rows
+    # for hub_slots high-degree vertices, tail_capacity-slot sorted buffers
+    # for the rest, promotion at streamed degree >= hub_threshold. All four
+    # are trace-static (hub_threshold is a jit static arg; the others fix
+    # state array shapes), so they live in cache_key(), not ADMISSION_ONLY.
+    state_layout: str = "bitset"
+    hub_slots: int = 0
+    tail_capacity: int = 0
+    hub_threshold: int = 0
     predicted_bytes: int = 0
     predicted_cost: float = 0.0
     reason: str = ""
@@ -159,7 +184,8 @@ class Plan:
         by the counter)."""
         return (self.method, self.n_stages, self.use_kernel, self.interpret,
                 self.balance, self.edge_batch, self.node_batch, self.block_size,
-                self.window_epochs)
+                self.window_epochs, self.state_layout, self.hub_slots,
+                self.tail_capacity, self.hub_threshold)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -243,6 +269,63 @@ def stream_sizing(stats: GraphStats, res: Resources, *,
     return n_stages, block_size, shard_bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class HybridSizing:
+    """The hybrid regime's sizing verdict: state array shapes plus the bytes
+    :func:`admit_session` charges for them (``state_bytes`` is EXACTLY
+    ``streaming.hybrid_state_nbytes`` — the planner predicts the same number
+    the session allocates, pinned by tests)."""
+
+    hub_slots: int
+    tail_capacity: int
+    hub_threshold: int
+    state_bytes: int
+    block_size: int
+
+
+def hybrid_sizing(stats: GraphStats, res: Resources) -> HybridSizing | None:
+    """Size the degree-aware hybrid state for ``stats``, or ``None`` when a
+    plain bitset is at least as small (small n — the hybrid's per-vertex
+    fixed buffers would cost MORE than n²/8).
+
+    With informative stats (``n_edges > 0``) the tail capacity is ~8x the
+    average degree (power-law tails sit far below the mean, hubs far above —
+    the promotion threshold catches the latter) and hub slots cover ~4x the
+    vertices a uniform spread would need at that capacity. With stream-only
+    stats (``n_edges == 0``) the tail defaults to ``_HYBRID_TAIL_DEFAULT``
+    neighbors and hub slots grow from ``_HYBRID_HUB_MIN`` toward a quarter
+    of the memory budget — admission cannot see degrees, so it buys as much
+    promotion headroom as the budget allows. The block size keeps the
+    block-local phase-2 working set (~16·B² bytes of packed int32 plus
+    gathered rows) within a quarter of the budget."""
+    n = max(stats.n_nodes, 1)
+    w = -(-n // 32)
+    n_cap = _pow2_at_least(n)
+    budget = max(res.memory_bytes // 4, 1)
+    if stats.n_edges > 0:
+        avg = max(1, (2 * stats.n_edges) // n)
+        cap = min(max(_pow2_at_least(8 * avg), _HYBRID_TAIL_MIN), _HYBRID_TAIL_MAX)
+        hubs = min(max(_pow2_at_least(4 * stats.n_edges // cap + 1),
+                       _HYBRID_HUB_MIN), n_cap)
+    else:
+        cap = _HYBRID_TAIL_DEFAULT
+        hubs = _HYBRID_HUB_MIN
+        while hubs * 2 <= n_cap and (hubs * 2) * w * 4 * 2 <= budget:
+            hubs *= 2
+    from repro.core.streaming import hybrid_state_nbytes
+
+    nbytes = hybrid_state_nbytes(n, hubs, cap)
+    if nbytes >= 4 * n * w:  # dense bitset is no bigger: hybrid buys nothing
+        return None
+    block_budget = max(res.memory_bytes // 4, 1 << 20)
+    block = _HYBRID_BLOCK_MIN
+    while (block < _HYBRID_BLOCK_MAX
+           and 2 * (32 * block * w + 16 * block * block) <= block_budget):
+        block *= 2
+    return HybridSizing(hub_slots=hubs, tail_capacity=cap, hub_threshold=cap,
+                        state_bytes=nbytes, block_size=block)
+
+
 def backend_exec_flags(res: Resources) -> dict:
     """The backend decision every executable plan carries: compiled Pallas
     kernels on TPU, interpret-mode XLA elsewhere. One definition so the
@@ -294,6 +377,28 @@ def plan(stats: GraphStats, resources: Resources | None = None, *,
         n_stages, block_size, shard_bytes = stream_sizing(
             stats, res, window_epochs=window_epochs)
         fits = shard_bytes <= res.memory_bytes
+        # Degree-aware hybrid regime (unbounded streams only — the windowed
+        # epoch ring and the mesh stage axis stay bitset): picked when the
+        # dense/sharded bitset does NOT fit, or when informative stats say
+        # the hybrid state is outright smaller than the best bitset shard.
+        hyb = None if window_epochs else hybrid_sizing(stats, res)
+        if hyb is not None and (not fits or (stats.n_edges > 0
+                                             and hyb.state_bytes < shard_bytes)):
+            hyb_fits = hyb.state_bytes <= res.memory_bytes
+            return Plan(
+                method="stream", n_stages=1, block_size=hyb.block_size,
+                state_layout="hybrid", hub_slots=hyb.hub_slots,
+                tail_capacity=hyb.tail_capacity, hub_threshold=hyb.hub_threshold,
+                predicted_bytes=hyb.state_bytes, predicted_cost=cost,
+                **backend_exec_flags(res),
+                reason=(f"edges not memory-resident -> degree-aware hybrid "
+                        f"streaming state ({hyb.hub_slots} hub bitset rows + "
+                        f"{hyb.tail_capacity}-slot tail buffers, "
+                        f"{hyb.state_bytes} B vs {shard_bytes} B bitset shard)"
+                        + ("" if hyb_fits else
+                           " (WARNING: even the hybrid state exceeds the "
+                           "memory budget)")),
+            )
         shape = (f"ring-sharded ({n_stages} stages, ~{shard_bytes >> 20} MB/stage) "
                  if n_stages > 1 else "")
         window = (f"windowed ({window_epochs}-epoch ring) " if window_epochs else "")
@@ -370,6 +475,10 @@ class Admission:
     ``action`` is ``"admit-dense"`` (plan has ``n_stages == 1``: the session's
     full n²/8 bitset fits the remaining budget), ``"admit-sharded"``
     (``n_stages > 1``: only a n²/8/S column shard per stage fits),
+    ``"admit-hybrid"`` (``plan.state_layout == "hybrid"``: not even the
+    max-ring-width bitset shard fits, but the degree-aware hybrid state —
+    hub bitset rows + fixed-capacity tail buffers, linear in n — does; only
+    for unbounded streams, the windowed epoch ring stays bitset),
     ``"preempt"`` (it fits only if the active sessions named by ``victims``
     are first checkpointed off the device — the fair-share verdict: every
     victim has STRICTLY lower priority than the request), or ``"queue"``
@@ -437,8 +546,26 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
                                              window_epochs=window_epochs)
     window = f"windowed ({window_epochs} epochs) " if window_epochs else ""
     if shard_bytes > remaining:
+        # degree-aware hybrid fallback (unbounded streams only): when even
+        # the max-ring-width bitset shard overflows the remainder, the
+        # linear-in-n hybrid state may still fit — admit it honestly before
+        # resorting to preemption. plan(stats, sub) picks hybrid by the same
+        # rule (bitset does not fit sub), so plan and charge stay consistent.
+        hyb = None if window_epochs else hybrid_sizing(stats, sub)
+        if hyb is not None and hyb.state_bytes <= remaining:
+            return Admission(
+                action="admit-hybrid",
+                plan=plan(stats, sub, window_epochs=window_epochs),
+                state_bytes=hyb.state_bytes,
+                reason=(f"admit-hybrid: bitset shard needs {shard_bytes} B "
+                        f"but the degree-aware hybrid state "
+                        f"({hyb.hub_slots} hub rows + {hyb.tail_capacity}-slot "
+                        f"tail buffers) fits {hyb.state_bytes} B into the "
+                        f"{remaining} B remaining "
+                        f"({bytes_in_use} B already pinned)"))
         # preemption sweep: grow the budget victim by victim (lowest
-        # priority, then largest state) until the request's shard fits
+        # priority, then largest state) until the request's shard — bitset
+        # first, hybrid as the same fallback — fits
         eligible = sorted(
             (i for i, (nbytes, prio) in enumerate(actives or ())
              if prio < priority),
@@ -450,13 +577,18 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
             sub_k = dataclasses.replace(res, memory_bytes=remaining + freed)
             n_stages, _, shard_bytes = stream_sizing(
                 stats, sub_k, window_epochs=window_epochs)
+            hyb_k = None if window_epochs else hybrid_sizing(stats, sub_k)
+            fit_bytes = None
             if shard_bytes <= remaining + freed:
-                kind = "sharded" if n_stages > 1 else "dense"
+                fit_bytes = shard_bytes
+            elif hyb_k is not None and hyb_k.state_bytes <= remaining + freed:
+                fit_bytes = hyb_k.state_bytes
+            if fit_bytes is not None:
                 return Admission(
                     action="preempt",
                     plan=plan(stats, sub_k, window_epochs=window_epochs),
-                    state_bytes=shard_bytes, victims=tuple(victims),
-                    reason=(f"preempt: {window}{shard_bytes} B/stage state "
+                    state_bytes=fit_bytes, victims=tuple(victims),
+                    reason=(f"preempt: {window}{fit_bytes} B/stage state "
                             f"fits only after checkpointing {len(victims)} "
                             f"lower-priority active(s) ({freed} B freed, "
                             f"priority {priority} over "
@@ -466,6 +598,8 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
             reason=(f"{window}state shard needs {shard_bytes} B but "
                     f"{remaining} B of {res.memory_bytes} B remain (even at "
                     f"ring width {n_stages}"
+                    + (f", and the {hyb.state_bytes} B hybrid state does not "
+                       f"fit either" if hyb is not None else "")
                     + (f"; preempting all {len(eligible)} lower-priority "
                        f"active(s) frees only {freed} B" if eligible else "")
                     + ") — queue until an active session closes"))

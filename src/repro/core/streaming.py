@@ -31,6 +31,18 @@ runs under shard_map via ``dynamic_pipeline.ShardedStateStream``
 (``make_mesh_ingest``), on a single host it is emulated with a vmap over the
 stage axis.
 
+DEGREE-AWARE HYBRID STATE (``init_hybrid_state``/``ingest_block_hybrid``)
+escapes the n²/8 wall for sparse streams: full bitset rows only for
+high-degree hubs (promoted when their streamed degree crosses a threshold
+or their buffer would overflow), compacted sorted-adjacency buffers of C
+neighbor slots for the long tail — ``4·(H·W + n·(C+2))`` bytes, linear in
+n. The two-phase blocked contract is preserved exactly: phase 1 gathers
+full-width rows for the block's endpoints only, phase 2 runs in a packed
+block-local vertex space, and ``pre + mixed//2 + dd//3`` is bit-identical
+to the dense state (pinned by tests/test_hybrid_stream.py's randomized
+differential harness). Capacity exhaustion is counted in ``lost`` and
+raises at finalize — never a silent undercount.
+
 SLIDING WINDOWS (``init_windowed_state``/``ingest_block_windowed``/
 ``expire_epoch``) extend the same contract with deletions: the state is a
 ring of E epoch bitsets (E·n²/8 bytes; ``/S`` per stage when ring-sharded)
@@ -731,6 +743,273 @@ def ingest_block_per_edge(state: dict, edges: jax.Array) -> dict:
     (adj, count), _ = jax.lax.scan(one, (state["adj"], state["count"]),
                                    edges.astype(jnp.int32))
     return {"adj": adj, "count": count}
+
+
+# --------------------------------------------------------------------------
+# Degree-aware hybrid state: bitset rows for hubs, fixed-capacity sorted
+# adjacency buffers for the long tail — the escape from the n²/8 wall
+# --------------------------------------------------------------------------
+def init_hybrid_state(n_nodes: int, hub_slots: int, tail_capacity: int) -> dict:
+    """Hybrid streaming state: ``hub_slots`` full bitset rows reserved for
+    high-degree vertices plus a compacted sorted-adjacency buffer of
+    ``tail_capacity`` neighbor slots per vertex for the long tail.
+
+    Layout (all int32/uint32):
+
+    - ``hub_adj``  (H, W)  — one full-width bitset row per hub slot
+    - ``hub_ids``  (H,)    — vertex owning each slot (sentinel n = free)
+    - ``hub_slot`` (n,)    — slot index per vertex (-1 = tail vertex)
+    - ``tail_nbr`` (n, C)  — sorted neighbor ids, sentinel n past the fill
+    - ``deg``      (n,)    — streamed degree so far (the promotion sketch)
+    - ``count``            — running triangle total; ``lost`` — edge
+      endpoints DROPPED on capacity exhaustion (must stay 0; the serving
+      tier raises loudly otherwise — never a silent undercount)
+
+    State bytes: ``4·(H·W + H + n·(C+2)) + O(1)`` (:func:`hybrid_state_nbytes`
+    is the exact planner-side formula) — linear in n instead of the dense
+    n²/8 whenever C ≪ n/8. Allocation only; traces nothing."""
+    if hub_slots < 1:
+        raise ValueError(f"hub_slots must be >= 1, got {hub_slots}")
+    if tail_capacity < 1:
+        raise ValueError(f"tail_capacity must be >= 1, got {tail_capacity}")
+    w = -(-n_nodes // 32)
+    return {
+        "hub_adj": jnp.zeros((hub_slots, w), jnp.uint32),
+        "hub_ids": jnp.full((hub_slots,), n_nodes, jnp.int32),
+        "hub_slot": jnp.full((n_nodes,), -1, jnp.int32),
+        "tail_nbr": jnp.full((n_nodes, tail_capacity), n_nodes, jnp.int32),
+        "deg": jnp.zeros((n_nodes,), jnp.int32),
+        "count": jnp.zeros((), count_dtype()),
+        "lost": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_state_nbytes(n_nodes: int, hub_slots: int, tail_capacity: int) -> int:
+    """EXACT device bytes of :func:`init_hybrid_state` — the formula the
+    planner charges at admission, asserted equal to the real allocation by
+    the planner test suite (a drifting estimate would corrupt every
+    admission ledger above it)."""
+    w = -(-n_nodes // 32)
+    scalar = int(np.dtype(count_dtype()).itemsize)
+    return 4 * (hub_slots * w + hub_slots + n_nodes * (tail_capacity + 2)) \
+        + scalar + 4
+
+
+def _tail_rows(nbrs: jax.Array, n: int, w: int) -> jax.Array:
+    """(R, C) sorted tail neighbor buffers -> (R, W) full-width bitset rows.
+
+    The sentinel column is mapped to word W EXPLICITLY (scatter drop): the
+    naive ``n // 32`` is a REAL word index whenever ``n % 32 != 0``, so
+    relying on the id itself being out of range would corrupt bit n%32 of
+    the last word."""
+    r = nbrs.shape[0]
+    real = nbrs < n
+    col = jnp.where(real, nbrs // 32, w)
+    bit = jnp.where(real, jnp.uint32(1) << (nbrs % 32).astype(jnp.uint32),
+                    jnp.uint32(0))
+    # buffer entries are distinct neighbors, so add == bitwise-or
+    return jnp.zeros((r, w), jnp.uint32).at[
+        jnp.arange(r)[:, None], col].add(bit)
+
+
+@partial(jax.jit, static_argnames=("hub_threshold",))
+def ingest_block_hybrid(state: dict, edges: jax.Array, *,
+                        hub_threshold: int) -> dict:
+    """Fold one (B, 2) int32 edge block into the HYBRID state — the same
+    two-phase ``pre + mixed//2 + dd//3`` contract as ``ingest_block``, bit
+    for bit, without ever materializing an (n, W) table.
+
+    Phase 1 gathers full-width pre-block rows for the 2B endpoints only
+    (hub rows verbatim, tail buffers expanded via :func:`_tail_rows`) and
+    popcounts closures. Phase 2 works in a BLOCK-LOCAL vertex space: the
+    block delta D only ever touches block endpoints, so D and the
+    restriction of A to block-vertex columns are packed into (2B, ceil(2B/32))
+    words and the exact dense multiplicities carry over unchanged (mixed
+    counts each (block, block, pre-block) triangle twice, dd each
+    all-in-block triangle three times).
+
+    PROMOTION runs before insertion: a tail vertex whose streamed degree
+    would exceed its buffer (mandatory) or reaches ``hub_threshold``
+    (policy) claims a free hub slot — its buffer is expanded into the slot's
+    bitset row and cleared — with mandatory promotions outranking policy
+    ones when slots are scarce. Only when every slot is taken AND a buffer
+    still overflows are edge endpoints dropped, counted in ``lost`` (the
+    serving tier refuses to finalize a lossy session).
+
+    Transient working set: ~8 full-width row-gathers of B edges (32·B·W
+    bytes) plus the (2B)² local bit matrix — the planner's hybrid block
+    sizing keeps both inside the memory budget. Trace contract: one trace
+    per (block shape, n, H, C, threshold) — module-level jit, shared across
+    sessions; promotion and degree updates are data, never a retrace."""
+    _INGEST_TRACES[0] += 1
+    hub_adj, hub_ids = state["hub_adj"], state["hub_ids"]
+    hub_slot, tail_nbr, deg = state["hub_slot"], state["tail_nbr"], state["deg"]
+    n = hub_slot.shape[0]
+    h, w = hub_adj.shape
+    c = tail_nbr.shape[1]
+    b = edges.shape[0]
+
+    keep, lo, hi = _canonical_live(edges, n)
+
+    def full_rows(v):
+        # (B, W) pre-block adjacency rows (phantom id n -> zero row)
+        gv = jnp.clip(v, 0, n - 1)
+        slot = jnp.where(v < n, hub_slot[gv], -1)
+        hubrow = hub_adj[jnp.clip(slot, 0, h - 1)]
+        tailrow = _tail_rows(tail_nbr[gv], n, w)
+        rows = jnp.where((slot >= 0)[:, None], hubrow, tailrow)
+        return jnp.where((v < n)[:, None], rows, jnp.uint32(0))
+
+    rows_lo = full_rows(lo)
+    rows_hi = full_rows(hi)
+
+    # dedup against A: bit hi of lo's row (rows are symmetric by insertion)
+    word = rows_lo[jnp.arange(b), jnp.clip(hi // 32, 0, w - 1)]
+    seen = (word >> (hi % 32).astype(jnp.uint32)) & jnp.uint32(1)
+    live = keep & (seen == 0)
+
+    def masked_sum(words, mask):
+        pc = jax.lax.population_count(words).sum(axis=-1)
+        return jnp.sum(jnp.where(mask, pc, 0), dtype=count_dtype())
+
+    pre = masked_sum(rows_lo & rows_hi, live)
+
+    # ---- block-local vertex space for the intra-block correction ----
+    big = 2 * b
+    wl = -(-big // 32)
+    rlo = jnp.where(live, lo, n)
+    rhi = jnp.where(live, hi, n)
+    verts = jnp.concatenate([rlo, rhi])      # one occurrence per endpoint
+    others = jnp.concatenate([rhi, rlo])     # the occurrence's neighbor
+    liveo = jnp.concatenate([live, live])
+    order = jnp.argsort(verts, stable=True)
+    sv = verts[order]
+    firsts = jnp.concatenate([jnp.ones((1,), bool), sv[1:] != sv[:-1]])
+    lid_sorted = (jnp.cumsum(firsts) - 1).astype(jnp.int32)
+    lid = jnp.zeros((big,), jnp.int32).at[order].set(lid_sorted)
+    # global vertex per local id (dead occurrences share the id of value n)
+    gvert = jnp.full((big,), n, jnp.int32).at[lid_sorted].set(sv)
+
+    # D in local space: each live edge's two bits, one scatter each way
+    l_lo, l_hi = lid[:b], lid[b:]
+
+    def dscat(dst, row, cvert):
+        rr = jnp.where(live, row, big)  # dead edges scatter out of bounds
+        bit = jnp.where(live, jnp.uint32(1) << (cvert % 32).astype(jnp.uint32),
+                        jnp.uint32(0))
+        return dst.at[rr, cvert // 32].add(bit)
+
+    dloc = dscat(dscat(jnp.zeros((big, wl), jnp.uint32), l_lo, l_hi), l_hi, l_lo)
+
+    # A restricted to block-vertex columns, per occurrence, packed to words
+    rows_cat = jnp.concatenate([rows_lo, rows_hi])          # (2B, W)
+    gw = jnp.clip(gvert // 32, 0, w - 1)
+    abit = (rows_cat[:, gw] >> (gvert % 32).astype(jnp.uint32)[None, :]) \
+        & jnp.uint32(1)                                      # (2B, L)
+    abit = jnp.where((gvert < n)[None, :], abit, jnp.uint32(0))
+    abit = jnp.pad(abit, ((0, 0), (0, wl * 32 - big)))
+    aloc = (abit.reshape(big, wl, 32)
+            << jnp.arange(32, dtype=jnp.uint32)[None, None, :]).sum(
+        axis=-1, dtype=jnp.uint32)                           # (2B, Wl)
+
+    d_lo = dloc[jnp.clip(l_lo, 0, big - 1)]
+    d_hi = dloc[jnp.clip(l_hi, 0, big - 1)]
+    mixed = masked_sum(aloc[:b] & d_hi, live) + masked_sum(d_lo & aloc[b:], live)
+    dd = masked_sum(d_lo & d_hi, live)
+    count = _combine(state["count"], jnp.stack([pre, mixed, dd]))
+
+    # ---- promotion (BEFORE insertion, on pre-block buffers) ----
+    occ = jnp.zeros((big,), jnp.int32).at[jnp.where(liveo, lid, big)].add(1)
+    real = gvert < n
+    gv_ok = jnp.clip(gvert, 0, n - 1)
+    is_tail = jnp.where(real, hub_slot[gv_ok] < 0, False)
+    newdeg = jnp.where(real, deg[gv_ok], 0) + occ
+    touched = is_tail & (occ > 0)
+    must = touched & (newdeg > c)            # buffer would overflow
+    want = touched & (newdeg >= hub_threshold)
+    cand = must | want
+    free = hub_ids == n
+    n_free = jnp.sum(free.astype(jnp.int32))
+    # mandatory promotions claim free slots before policy ones
+    mrank = jnp.cumsum(must.astype(jnp.int32)) - 1
+    wrank = jnp.sum(must.astype(jnp.int32)) \
+        + jnp.cumsum((cand & ~must).astype(jnp.int32)) - 1
+    prank = jnp.where(must, mrank, wrank)
+    slot_for = jnp.argsort(~free, stable=True)[jnp.clip(prank, 0, h - 1)]
+    ok = cand & (prank < n_free) & (prank < h)
+
+    s_ok = jnp.where(ok, slot_for, h)        # out-of-bounds scatter -> drop
+    v_ok = jnp.where(ok, gvert, n)
+    promo_rows = jnp.where(real[:, None], _tail_rows(tail_nbr[gv_ok], n, w),
+                           jnp.uint32(0))
+    hub_adj = hub_adj.at[s_ok].set(promo_rows)   # free slots hold zero rows
+    hub_ids = hub_ids.at[s_ok].set(v_ok)
+    hub_slot = hub_slot.at[v_ok].set(jnp.where(ok, slot_for, 0).astype(jnp.int32))
+    tail_nbr = tail_nbr.at[v_ok].set(jnp.int32(n))
+
+    # ---- insertion (hub rows get bits, tail buffers get sorted ids) ----
+    slot_now = jnp.where(liveo, hub_slot[jnp.clip(verts, 0, n - 1)], -1)
+    to_hub = liveo & (slot_now >= 0)
+    hbit = jnp.where(to_hub, jnp.uint32(1) << (others % 32).astype(jnp.uint32),
+                     jnp.uint32(0))
+    # live edges are deduped and absent from A, so the added bits are
+    # distinct and unset: add == bitwise-or (promoted rows included)
+    hub_adj = hub_adj.at[jnp.where(to_hub, slot_now, h),
+                         jnp.clip(others // 32, 0, w - 1)].add(hbit)
+
+    to_tail = liveo & (slot_now < 0)
+    # arrival rank of each occurrence within its vertex's block segment
+    first_pos = jnp.full((big,), big, jnp.int32).at[lid_sorted].min(
+        jnp.arange(big, dtype=jnp.int32))
+    rank = jnp.zeros((big,), jnp.int32).at[order].set(
+        jnp.arange(big, dtype=jnp.int32) - first_pos[lid_sorted])
+    pos = jnp.where(liveo, deg[jnp.clip(verts, 0, n - 1)], 0) + rank
+    over = to_tail & (pos >= c)              # slot exhausted AND buffer full
+    tail_nbr = tail_nbr.at[jnp.where(to_tail & (pos < c), verts, n),
+                           jnp.clip(pos, 0, c - 1)].set(
+        jnp.where(to_tail, others, n))
+    lost = state["lost"] + jnp.sum(over.astype(jnp.int32))
+
+    # keep touched tail buffers sorted (sentinel n sorts past the fill):
+    # canonical layout -> bit-identical checkpoints regardless of feed order
+    still_tail = real & (hub_slot[gv_ok] < 0) & touched
+    resorted = jnp.sort(tail_nbr[gv_ok], axis=1)
+    tail_nbr = tail_nbr.at[jnp.where(still_tail, gvert, n)].set(resorted)
+
+    deg = deg.at[jnp.where(liveo, verts, n)].add(1)
+    return {"hub_adj": hub_adj, "hub_ids": hub_ids, "hub_slot": hub_slot,
+            "tail_nbr": tail_nbr, "deg": deg, "count": count, "lost": lost}
+
+
+def hybrid_lost(state: dict) -> int:
+    """Host-synced dropped-endpoint counter of a hybrid state — must be 0
+    for the count to be exact; every finalize/checkpoint path raises when it
+    is not (capacity exhaustion is a sizing bug, never a silent
+    undercount)."""
+    return int(np.asarray(state["lost"]))
+
+
+def count_stream_hybrid(n_nodes: int, blocks, *, hub_slots: int,
+                        tail_capacity: int, hub_threshold: int | None = None,
+                        block_size: int | None = None) -> int:
+    """Consume an iterable of (B, 2) numpy edge blocks through the HYBRID
+    state — the differential twin of :func:`count_stream` for the fuzz
+    harness and benches. Raises if any edge endpoint was dropped (hub slots
+    exhausted while a tail buffer overflowed) instead of returning an
+    undercount. ``hub_threshold`` defaults to ``tail_capacity`` (promote
+    exactly when the buffer fills)."""
+    state = init_hybrid_state(n_nodes, hub_slots, tail_capacity)
+    step = partial(ingest_block_hybrid, hub_threshold=int(
+        tail_capacity if hub_threshold is None else hub_threshold))
+    for block in padded_blocks(blocks, n_nodes, block_size):
+        state = step(state, block)
+    lost = hybrid_lost(state)
+    if lost:
+        raise RuntimeError(
+            f"hybrid stream dropped {lost} edge endpoint(s): {hub_slots} hub "
+            f"slots exhausted while tail buffers of {tail_capacity} "
+            f"overflowed — resize hub_slots/tail_capacity")
+    return int(state["count"])
 
 
 class BlockBuffer:

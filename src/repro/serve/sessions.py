@@ -669,6 +669,13 @@ class StreamMultiplexer:
         sharding pins every shard) — mirrors ``StreamSession.state_bytes``
         without touching the device."""
         p = ckpt.plan
+        if p.state_layout == "hybrid":
+            from repro.core.streaming import hybrid_state_nbytes
+
+            # hybrid plans are single-stage by construction — the exact
+            # allocation formula, same figure admission charged at open
+            return hybrid_state_nbytes(ckpt.n_nodes, p.hub_slots,
+                                       p.tail_capacity)
         w = -(-ckpt.n_nodes // 32)
         per_stage = (max(p.window_epochs, 1) * 4 * ckpt.n_nodes
                      * -(-w // p.n_stages))

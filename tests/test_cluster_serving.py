@@ -389,6 +389,58 @@ def test_router_ledger_matches_planner_predictions(cluster):
     assert router.charged_bytes() == [0, 0]  # and back to zero
 
 
+def test_router_ledger_covers_hybrid_sessions():
+    """The ledger property extended to the hybrid regime: workers whose
+    budgets reject the n²/8 bitset (4096 nodes -> 2 MiB) admit the
+    degree-aware hybrid state, the router charges EXACTLY the
+    planner-predicted hybrid bytes, migration moves them (exercising the
+    checkpoint-restore hybrid byte accounting), and closes drain to zero —
+    with counts bit-identical to the single-process oracle."""
+    wa = WorkerClient.spawn(memory_bytes=1_500_000)
+    wb = WorkerClient.spawn(memory_bytes=1_500_000)
+    n = 4096
+    rng = np.random.default_rng(3)
+    w = np.arange(1, n + 1, dtype=np.float64) ** -0.9
+    w /= w.sum()
+    m = 1536
+    streams = [np.stack([rng.choice(n, m, p=w), rng.choice(n, m, p=w)],
+                        1).astype(np.int32) for _ in range(2)]
+    blocks = [[e[i:i + BS] for i in range(0, m, BS)] for e in streams]
+    with ClusterRouter([wa, wb], checkpoint_every_bytes=None) as router:
+        adm = worker_admission(
+            n, WorkerLoad(router.workers[0].resources, charged_bytes=0,
+                          mesh_devices=router.workers[0].mesh_devices))
+        assert adm.action == "admit-hybrid"
+        want = adm.state_bytes
+        local = _local_oracle()
+        g1, l1 = router.open(n, block_size=BS), local.open(n, block_size=BS)
+        assert router.charged_bytes() == [want, 0]
+        g2, l2 = router.open(n, block_size=BS), local.open(n, block_size=BS)
+        assert router.charged_bytes() == [want, want]  # least-loaded spread
+        half = len(blocks[0]) // 2
+        for (g, l), bl in zip(((g1, l1), (g2, l2)), blocks):
+            for b in bl[:half]:
+                router.feed(g, b)
+                local.feed(l, b)
+        # free worker 0, then migrate g2 onto it: the restored session must
+        # re-charge the same hybrid bytes (checkpoint carries the plan)
+        r1 = router.close(g1)
+        assert r1.item() == local.close(l1).item()
+        assert router.charged_bytes() == [0, want]
+        router.migrate(g2, to=0)
+        assert router.worker_of(g2) == 0
+        assert router.charged_bytes() == [want, 0]
+        for b in blocks[1][half:]:
+            router.feed(g2, b)
+            local.feed(l2, b)
+        r2 = router.close(g2)
+        lr2 = local.close(l2)
+        assert r2.item() == lr2.item()
+        assert np.asarray(r2.count).dtype == np.asarray(lr2.count).dtype
+        assert r2.plan.state_layout == "hybrid"
+        assert router.charged_bytes() == [0, 0]
+
+
 def test_open_rejects_never_fits_and_queues_full_cluster(cluster):
     """The front door enforces the placement verdicts: never-fits →
     ValueError, fits-but-not-now → BackpressureError (no router-side

@@ -1,0 +1,73 @@
+"""Hypothesis-powered twin of ``test_hybrid_stream.py``'s differential
+harness: where the seeded module enumerates a fixed topology × seed grid,
+this one lets hypothesis DRIVE the generator — topology family, size,
+density, mangling, and blocking are all drawn strategies, and shrinking
+turns any mismatch into a minimal counterexample. Skipped (via
+``tests/conftest.py``) when hypothesis is not installed; CI's tier-1 job
+installs it (the ``test`` extra in pyproject.toml), so these fire there.
+
+Node counts are drawn from a SMALL FIXED palette, not a free integer range:
+each (n, hub_slots, tail_capacity) triple is its own jit trace, and an
+unbounded n would compile per example instead of per palette entry.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streaming import count_stream, count_stream_hybrid
+
+_BLOCK = 64
+_NS = (48, 96, 160)  # fixed palette: bounded trace count across examples
+
+
+def _edges(topology, n, density, seed):
+    rng = np.random.default_rng(seed)
+    if topology == "powerlaw":
+        w = np.arange(1, n + 1, dtype=np.float64) ** -0.85
+        w /= w.sum()
+        m = max(int(density * n * 8), 8)
+        e = np.stack([rng.choice(n, m, p=w), rng.choice(n, m, p=w)], 1)
+    elif topology == "star":
+        spokes = np.stack([np.zeros(n - 1, np.int64),
+                           np.arange(1, n, dtype=np.int64)], 1)
+        iu = np.triu_indices(n, 1)
+        keep = rng.random(len(iu[0])) < 4.0 / n
+        e = np.concatenate([spokes, np.stack([iu[0][keep], iu[1][keep]], 1)])
+    else:  # gnp
+        iu = np.triu_indices(n, 1)
+        keep = rng.random(len(iu[0])) < density
+        e = np.stack([iu[0][keep], iu[1][keep]], 1)
+    return e.astype(np.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(topology=st.sampled_from(("gnp", "powerlaw", "star")),
+       n=st.sampled_from(_NS),
+       density=st.floats(0.02, 0.4),
+       seed=st.integers(0, 10_000),
+       dup_frac=st.floats(0.0, 0.5),
+       n_loops=st.integers(0, 6),
+       flip=st.booleans())
+def test_hybrid_count_is_bit_identical_to_dense(topology, n, density, seed,
+                                                dup_frac, n_loops, flip):
+    """Property: for ANY drawn topology, mangling, and blocking, the hybrid
+    state's count equals the dense bitset fold exactly — with a config sized
+    so promotion pressure is real but loss is impossible (hub slots cover
+    every vertex that can outgrow its tail buffer)."""
+    rng = np.random.default_rng(seed)
+    e = _edges(topology, n, density, seed)
+    if len(e):
+        dups = e[rng.integers(0, len(e), size=int(len(e) * dup_frac))]
+        e = np.concatenate([e, dups])
+    if n_loops:
+        v = rng.integers(0, n, n_loops, dtype=np.int32)
+        e = np.concatenate([e, np.stack([v, v], 1)])
+    if flip and len(e):
+        e = e[:, ::-1].copy()
+    rng.shuffle(e)
+    blocks = [e[i:i + 37] for i in range(0, len(e), 37)] or [e]
+    want = count_stream(n, blocks, block_size=_BLOCK)
+    # tail_capacity 16 with hub_slots = n: every overflower can promote, so
+    # the differential claim is unconditional (lost edges raise instead)
+    got = count_stream_hybrid(n, blocks, hub_slots=n, tail_capacity=16,
+                              hub_threshold=8, block_size=_BLOCK)
+    assert got == want

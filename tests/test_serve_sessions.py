@@ -154,9 +154,16 @@ def test_admission_dense_sharded_queue_regimes():
     a = admit_session(100_000, Resources(n_devices=8, memory_bytes=256 << 20))
     assert a.action == "admit-sharded"
     assert a.plan.n_stages > 1 and a.state_bytes <= 256 << 20
-    # even the full ring width cannot hold a shard: queue, no plan
+    # even the full ring width cannot hold a bitset shard, but the
+    # degree-aware hybrid state (linear in n) fits: admit-hybrid
     a = admit_session(100_000, Resources(n_devices=2, memory_bytes=64 << 20))
+    assert a.action == "admit-hybrid" and a.admitted
+    assert a.plan.state_layout == "hybrid" and a.plan.n_stages == 1
+    assert "hybrid" in a.reason and a.state_bytes <= 64 << 20
+    # not even the hybrid tail buffers fit: queue, no plan
+    a = admit_session(100_000, Resources(n_devices=2, memory_bytes=4 << 20))
     assert a.action == "queue" and not a.admitted and a.plan is None
+    assert "hybrid" in a.reason  # the verdict names the regime it rejected
 
 
 def test_admission_accounts_bytes_in_use():
@@ -199,13 +206,26 @@ def test_emulated_sharding_does_not_discount_admission():
     """Regression: the planner's n²/8/S-per-stage accounting only holds on a
     real mesh. Without one, the 'sharded' state keeps all S shards on the
     single host device, so the multiplexer must NOT admit a 1.25 GB state
-    against a 256 MB budget just because one shard would fit."""
+    against a 256 MB budget just because one shard would fit. The re-taken
+    ring-width-1 decision now lands on the degree-aware hybrid regime — and
+    charges its FULL (linear-in-n) state, never a phantom shard discount."""
+    from repro.core.streaming import hybrid_state_nbytes
+
     res = Resources(n_devices=8, memory_bytes=256 << 20)
     assert admit_session(100_000, res).action == "admit-sharded"  # mesh model
     mux = StreamMultiplexer(TriangleCounter(res))  # no mesh -> emulated
-    with pytest.raises(ValueError, match="never be admitted"):
-        mux.open(100_000)
-    assert mux.bytes_in_use == 0 and mux.n_active == 0 and mux.n_queued == 0
+    sid = mux.open(100_000)
+    assert mux.status(sid) == "active"
+    rec = mux._recs[sid]
+    p = rec.session.plan
+    assert p.state_layout == "hybrid" and p.n_stages == 1
+    # the honest charge: exactly the hybrid allocation formula, and nothing
+    # like the 1.25 GB bitset the emulated shard would really have pinned
+    want = hybrid_state_nbytes(100_000, p.hub_slots, p.tail_capacity)
+    assert mux.bytes_in_use == want == rec.session.state_bytes
+    assert want <= 256 << 20 < 4 * 100_000 * (-(-100_000 // 32))
+    mux.close(sid)
+    assert mux.bytes_in_use == 0
 
 
 def test_never_fitting_stream_rejected_at_open_not_queued_forever():

@@ -217,9 +217,18 @@ def test_stream_plan_single_stage_when_state_fits():
 def test_stream_plan_warns_when_even_full_ring_does_not_fit():
     stats = GraphStats(n_nodes=1_000_000, n_edges=0, replication_factor=0,
                        max_degree=0, max_fwd_degree=0, edges_in_memory=False)
+    # unbounded: the degree-aware hybrid state is the smallest layout; at
+    # n=1M even it overflows 64 MB, so the plan still carries a WARNING
     p = plan(stats, Resources(n_devices=2, memory_bytes=64 << 20))
-    assert p.method == "stream" and p.n_stages == 2
+    assert p.method == "stream" and p.state_layout == "hybrid"
+    assert p.n_stages == 1
     assert "WARNING" in p.reason
+    # windowed streams have no hybrid fallback (the epoch ring stays
+    # bitset): the old full-ring bitset warning survives there
+    pw = plan(stats, Resources(n_devices=2, memory_bytes=64 << 20),
+              window_epochs=2)
+    assert pw.state_layout == "bitset" and pw.n_stages == 2
+    assert "WARNING" in pw.reason
 
 
 # --------------------------------------------------------------------------

@@ -14,9 +14,12 @@ test's compilation.
 """
 import numpy as np
 
+from repro.api.counter import TriangleCounter
+from repro.api.planner import Plan
 from repro.core import streaming
 from repro.core.triangle_ref import count_triangles_brute
 from repro.graphs import generators as gen
+from repro.graphs.formats import canonical_edges
 from repro.serve.sessions import StreamMultiplexer
 
 
@@ -80,6 +83,70 @@ def test_distinct_block_shapes_cost_exactly_one_trace_each():
             mux.feed(sid, b)
         assert mux.close(sid).item() == count_triangles_brute(g)
     assert streaming.ingest_trace_count() - before == 2
+
+
+def _hybrid_plan(block):
+    # hub_slots >= n so promotion can never exhaust (lost edges would raise
+    # at finalize and poison the count pins); threshold 4 promotes eagerly,
+    # capacity 8 forces mandatory promotions on these densities
+    return Plan(method="stream", n_stages=1, block_size=block,
+                state_layout="hybrid", hub_slots=128, tail_capacity=8,
+                hub_threshold=4, reason="hybrid trace pin")
+
+
+def test_hybrid_sessions_share_one_trace_promotion_included():
+    """N hybrid sessions on one block shape -> exactly ONE ingest trace.
+    The pin covers the whole degree-aware machinery: per-block degree
+    updates, threshold promotions, mandatory overflow promotions, and a
+    late-emerging hub are all INSIDE the traced body — none may retrace."""
+    n, block = 121, 33
+    graphs = [gen.gnp(n, 0.2, seed=60 + s) for s in range(3)]
+    # a hub-heavy stream whose star center crosses the threshold mid-stream
+    rng = np.random.default_rng(8)
+    spokes = np.stack([np.zeros(n - 1, np.int32),
+                       np.arange(1, n, dtype=np.int32)], 1)
+    star_raw = np.concatenate([spokes, gen.gnp(n, 0.03, seed=77).edges])
+    rng.shuffle(star_raw)
+    star_g = canonical_edges(star_raw, n_nodes=n)
+    c = TriangleCounter()
+    before = streaming.ingest_trace_count()
+    sessions = [c.open_stream(n, plan=_hybrid_plan(block)) for _ in graphs]
+    for s, g in zip(sessions, graphs):
+        for b in _blocks(g, block):
+            s.feed(b)
+    for g, s in zip(graphs, sessions):
+        assert s.finalize().item() == count_triangles_brute(g)
+    # the promotion-burst session rides the SAME trace
+    s4 = c.open_stream(n, plan=_hybrid_plan(block))
+    for i in range(0, len(star_raw), block):
+        s4.feed(star_raw[i:i + block])
+    assert s4.finalize().item() == count_triangles_brute(star_g)
+    assert streaming.ingest_trace_count() - before == 1
+    info = c.cache_info
+    assert info["traces"] == 1 and info["entries"] == 1
+    assert info["hits"] >= 3
+
+
+def test_hybrid_warm_reopen_retraces_nothing():
+    """Second wave of hybrid sessions on a warm counter: trace delta ZERO —
+    reopening allocates fresh state arrays but reuses the compiled ingest."""
+    n, block = 123, 29
+    c = TriangleCounter()
+    g = gen.gnp(n, 0.25, seed=5)
+    s = c.open_stream(n, plan=_hybrid_plan(block))
+    for b in _blocks(g, block):
+        s.feed(b)
+    assert s.finalize().item() == count_triangles_brute(g)
+    traces0 = c.cache_info["traces"]
+    before = streaming.ingest_trace_count()
+    for seed in (15, 17):
+        g2 = gen.gnp(n, 0.25, seed=seed)
+        s = c.open_stream(n, plan=_hybrid_plan(block))
+        for b in _blocks(g2, block):
+            s.feed(b)
+        assert s.finalize().item() == count_triangles_brute(g2)
+    assert streaming.ingest_trace_count() - before == 0
+    assert c.cache_info["traces"] == traces0
 
 
 def test_windowed_advance_is_trace_free():

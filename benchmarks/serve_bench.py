@@ -41,13 +41,22 @@ plus the cost of a forced mid-stream live migration
 bit-identical and — asserted from the workers' own trace counters — the
 migration itself compiles NOTHING new).
 
+``bench_async`` (op = ``serve_async``) prices the async double-buffered
+session driver: S=32 mixed dense+windowed sessions driven round-robin,
+synchronous mux vs ``prefetch_depth=2`` (background host re-blocking in a
+bounded device-ready queue + donated-buffer ingest) vs prefetch with
+adaptive block resizing — all against the single-stream sequential rate.
+The tentpole target is ASSERTED on full runs: the async multiplex
+sustains >= 90% of the single-stream ingest rate, and every mode's counts
+are bit-identical.
+
 Rows are MERGED into BENCH_kernels.json — all other ops' records are
 preserved. ``--quick`` is the CI-cheap variant (4 streams / 24 sessions,
 small graphs, interpret-safe CPU defaults).
 
 Usage: PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
            [--streams S] [--out F] [--skip-preempt] [--skip-multiplex]
-           [--skip-cluster]
+           [--skip-cluster] [--skip-async]
 """
 from __future__ import annotations
 
@@ -247,6 +256,109 @@ def bench_preempt(*, quick: bool = False) -> list[dict]:
     return records
 
 
+def bench_async(*, quick: bool = False, n_streams: int | None = None) -> list[dict]:
+    """Async double-buffered driver (op = ``serve_async``): S mixed
+    (dense + sliding-window) sessions driven round-robin, synchronous mux
+    vs ``prefetch_depth=2`` (background re-blocking + donated ingest) vs
+    prefetch + adaptive block resizing — against the SINGLE-stream
+    sequential rate as the ceiling. The tentpole target (asserted on full
+    runs): S=32 concurrent async sessions sustain >= 90% of the
+    single-stream ingest rate, i.e. host re-blocking overlapped with device
+    ingest makes S-way concurrency nearly free. Counts are asserted
+    bit-identical across all four drive modes every rep."""
+    from repro.serve.sessions import StreamMultiplexer
+
+    S = n_streams or (8 if quick else 32)
+    n, m, block = (256, 2_000, 256) if quick else (512, 8_000, 1024)
+    reps = 3 if quick else 5
+    streams = build_streams(S, n, m, block)
+    m_total = sum(len(g.edges) for g, _, _ in streams)
+    shape = f"S{S}/n{n}/m{m_total}/b{block}/d2"
+    counter = TriangleCounter()  # ONE compile cache across every mode
+    windows = [3 if i % 4 == 3 else None for i in range(S)]
+
+    def run_single():
+        """The ceiling: each stream alone on the device, one after another
+        — same total work, zero multiplexing."""
+        mux = StreamMultiplexer(counter, block_size=block)
+        out = []
+        for i, (_, blocks, _) in enumerate(streams):
+            sid = mux.open(n, window=windows[i])
+            for j, b in enumerate(blocks):
+                mux.feed(sid, b)
+                if windows[i] and (j + 1) % 8 == 0:
+                    mux.advance(sid)
+            out.append(mux.close(sid))
+        return out
+
+    def make_concurrent(**mux_kwargs):
+        def run():
+            mux = StreamMultiplexer(counter, block_size=block, **mux_kwargs)
+            sids = [mux.open(n, window=w) for w in windows]
+            pos = [0] * S
+            live = set(range(S))
+            out = [None] * S
+            while live:
+                for i in sorted(live):
+                    blocks = streams[i][1]
+                    mux.feed(sids[i], blocks[pos[i]])
+                    pos[i] += 1
+                    if windows[i] and pos[i] % 8 == 0:
+                        mux.advance(sids[i])
+                    if pos[i] >= len(blocks):
+                        live.discard(i)
+                        # close as soon as the stream ends: the quiesce of
+                        # THIS session's pipeline overlaps every other
+                        # session's still-running feeds
+                        out[i] = mux.close(sids[i])
+            return out
+        return run
+
+    modes = [
+        ("single_stream", run_single),
+        ("sync_multiplex", make_concurrent()),
+        ("async_multiplex", make_concurrent(prefetch_depth=2)),
+        ("async_adaptive", make_concurrent(prefetch_depth=2,
+                                           adaptive_block=True)),
+    ]
+    # correctness + warmup pass: every mode bit-identical to the first
+    # (dense sessions additionally checked against brute force)
+    ref = None
+    for name, fn in modes:
+        out = fn()
+        counts = [r.item() for r in out]  # lint: disable=R2 -- untimed warmup/correctness pass; syncs are the point here
+        for i, (g, _, want) in enumerate(streams):
+            if windows[i] is None:
+                assert counts[i] == want, f"{name} stream {i} wrong count"
+        if ref is None:
+            ref = counts
+        else:
+            assert counts == ref, f"{name} diverged from single_stream"
+
+    records, rates = [], {}
+    for name, fn in modes:
+        ms, out = timed_ms(fn, reps=reps, warmup=False,
+                           sync=lambda rs: [r.count for r in rs])
+        assert [r.item() for r in out] == ref  # lint: disable=R2 -- verifying the last rep's counts after its clock stopped
+        rates[name] = m_total / (ms / 1e3)
+        records.append({
+            "op": "serve_async", "shape": shape, "method": name,
+            "median_ms": round(ms, 3),
+            "grid_steps": sum(len(b) for _, b, _ in streams),
+            "edges_per_s": round(rates[name]),
+            "rate_vs_single": round(rates[name] / rates["single_stream"], 4),
+        })
+        print(f"  {name:22s} {ms:9.1f} ms for {S} streams "
+              f"({records[-1]['edges_per_s']:,} edges/s, "
+              f"{100 * records[-1]['rate_vs_single']:.1f}% of single-stream)")
+    if not quick:
+        ratio = rates["async_multiplex"] / rates["single_stream"]
+        assert ratio >= 0.90, (
+            f"S={S} async sessions must sustain >=90% of the single-stream "
+            f"ingest rate, got {100 * ratio:.1f}%")
+    return records
+
+
 def _cluster_traces(server) -> int:
     """Sum of the worker processes' ingest-trace counters."""
     return sum(w.get("ingest_traces", 0) for w in server.stats()["workers"]
@@ -354,6 +466,8 @@ def main() -> None:
                     help="skip the interleaved-vs-sequential scenario")
     ap.add_argument("--skip-cluster", action="store_true",
                     help="skip the multi-host router + worker-process scenario")
+    ap.add_argument("--skip-async", action="store_true",
+                    help="skip the async double-buffered driver scenario")
     args = ap.parse_args()
     print(f"serve_bench: backend={jax.default_backend()} quick={args.quick}")
     records = []
@@ -363,6 +477,8 @@ def main() -> None:
         records += bench_preempt(quick=args.quick)
     if not args.skip_cluster:
         records += bench_cluster(quick=args.quick)
+    if not args.skip_async:
+        records += bench_async(quick=args.quick)
     path = merge_bench_json(records, args.out)
     print(f"merged {len(records)} serve records into {path}")
 

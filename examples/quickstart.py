@@ -51,9 +51,11 @@ rb = counter.count_batch(small)
 print(f"batch of {len(small)}:   {[int(x) for x in rb.count]}")
 
 # Served: batched resident requests + CONCURRENT stream sessions, one server.
+# prefetch_depth=2 enables the async double-buffered session driver: host
+# re-blocking overlaps device ingest, bit-identical to the sync path.
 from repro.serve.serve_loop import TriangleServer
 
-server = TriangleServer()
+server = TriangleServer(prefetch_depth=2)
 served = server.serve(small)
 print(f"served batch:  {[r.item() for r in served]}")
 streams = [(graph.n_nodes, [graph.edges[i:i + 1024]

@@ -400,26 +400,32 @@ class TriangleCounter:
         # The ingest fns are module-level jits (shared across counters); a
         # fresh cache entry stands for at most one trace per fixed-shape
         # stream (see streaming.ingest_trace_count for the exact telemetry).
+        # Every non-mesh session path picks the DONATED twin uniformly: the
+        # session rebinds its state on every ingest, so the input buffers
+        # alias into the output and steady-state feeds allocate nothing.
+        # Uniform selection is what keeps the one-trace pins valid — the
+        # donated and plain jits trace separately, so mixing them per
+        # session would double the trace count per shape.
         entry.traces += 1
         if p.state_layout == "hybrid":
             # degree-aware hybrid state: hub bitset rows + tail buffers;
             # hub_threshold is the jit-static promotion knob (in cache_key)
-            return _partial(streaming.ingest_block_hybrid,
+            return _partial(streaming.ingest_block_hybrid_donated,
                             hub_threshold=p.hub_threshold)
         if p.window_epochs:
             if p.n_stages > 1:
                 if on_mesh:
                     return streaming.make_mesh_ingest_windowed(
                         self.mesh, use_kernel=p.use_kernel, interpret=p.interpret)
-                return streaming.ingest_block_windowed_sharded
-            return _partial(streaming.ingest_block_windowed,
+                return streaming.ingest_block_windowed_sharded_donated
+            return _partial(streaming.ingest_block_windowed_donated,
                             use_kernel=p.use_kernel, interpret=p.interpret)
         if p.n_stages > 1:
             if on_mesh:
                 return streaming.make_mesh_ingest(
                     self.mesh, use_kernel=p.use_kernel, interpret=p.interpret)
-            return streaming.ingest_block_sharded
-        return _partial(streaming.ingest_block, use_kernel=p.use_kernel,
+            return streaming.ingest_block_sharded_donated
+        return _partial(streaming.ingest_block_donated, use_kernel=p.use_kernel,
                         interpret=p.interpret)
 
     def batch_plan(self) -> Plan:
@@ -754,6 +760,82 @@ class StreamSession:
             self.state = self._entry.fn(self.state, b)
             self.n_blocks += 1
         self._wall += time.perf_counter() - t0
+
+    # -- async prefetch surface (serve.sessions._PrefetchDriver) -----------
+    # feed() = reblock() + ingest_ready() per emitted block, split so a
+    # background producer thread can own the host half (validate + BlockBuffer
+    # re-blocking/padding) while the drive thread owns the device half. The
+    # split is the public API on purpose: repro_lint R5 forbids serve/ from
+    # reaching into self._buffer/self._entry, and BlockBuffer's SPSC guard
+    # enforces that only one thread at a time runs the host half.
+
+    def reblock(self, edges) -> list:
+        """PRODUCER half of an async ``feed``: validate ``edges`` and push
+        them through the re-blocking buffer, returning every device-ready
+        fixed-shape block they completed (possibly none). Touches no device
+        state and no stats — safe to run on a background thread while the
+        drive thread ingests earlier blocks. The caller must route every
+        returned block through :meth:`ingest_ready` IN ORDER."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        from repro.core import streaming
+
+        return self._buffer.push(
+            streaming.validate_edges(edges, self.n_nodes))
+
+    def flush_ready(self):
+        """PRODUCER half of an async tail flush: the padded tail block
+        (None when nothing is buffered), NOT ingested. Used by the prefetch
+        producer at an ``advance`` boundary so the epoch's tail enters the
+        device-ready queue in order before the expiry marker."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        return self._buffer.flush()
+
+    def ingest_ready(self, block) -> None:
+        """CONSUMER half of an async ``feed``: dispatch one already-padded
+        device-ready block (from :meth:`reblock` / :meth:`flush_ready`) into
+        the session state. Must be called from the single drive thread, in
+        the order the blocks were produced — then the device-op sequence is
+        IDENTICAL to a synchronous ``feed`` of the same edges, which is why
+        async counts are bit-identical."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        t0 = time.perf_counter()
+        self.state = self._entry.fn(self.state, block)
+        self.n_blocks += 1
+        self._wall += time.perf_counter() - t0
+
+    def expire_ready(self) -> None:
+        """CONSUMER half of an async ``advance``: rotate the window WITHOUT
+        flushing the tail (the producer already flushed it through
+        :meth:`flush_ready` and queued it ahead of this marker). Same
+        single-slot clear as :meth:`advance`."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        if not self.plan.window_epochs:
+            raise RuntimeError(
+                "expire_ready() is for windowed sessions — open with "
+                "window=E (or a plan with window_epochs > 0)")
+        from repro.core import streaming
+
+        t0 = time.perf_counter()
+        self.state = streaming.expire_epoch(self.state)
+        self.n_epochs_advanced += 1
+        self._wall += time.perf_counter() - t0
+
+    def set_block_size(self, block_size: int) -> list:
+        """Adaptive re-blocking: change the emitted block shape from the
+        next block on (``BlockBuffer.set_block_size``; counts are invariant
+        to re-blocking). Returns any blocks the buffered remainder completed
+        at the new size — route them through :meth:`ingest_ready` in order.
+        The session's ``block_size`` follows, so a later checkpoint carries
+        the CURRENT shape and restore resumes with it."""
+        if self.result is not None:
+            raise RuntimeError("session already finalized")
+        out = self._buffer.set_block_size(block_size)
+        self.block_size = int(block_size)
+        return out
 
     def checkpoint(self) -> SessionCheckpoint:
         """Snapshot this session to host memory — the preemption primitive.

@@ -143,7 +143,8 @@ class Resources:
 # compiled function. repro_lint R6 enforces that every Plan field is either
 # in cache_key() or listed here, and R1/R6 reject reads of these fields
 # from compile-cache keys and executed paths.
-ADMISSION_ONLY = frozenset({"predicted_bytes", "predicted_cost", "reason"})
+ADMISSION_ONLY = frozenset({"predicted_bytes", "predicted_cost", "reason",
+                            "prefetch_depth"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,6 +176,12 @@ class Plan:
     hub_slots: int = 0
     tail_capacity: int = 0
     hub_threshold: int = 0
+    # Async prefetch pipeline depth the session was ADMITTED with (0 = the
+    # synchronous path). Admission-only on purpose: the in-flight blocks it
+    # budgets are transient edge arrays, not state, and the ingest trace is
+    # identical at every depth — two plans differing only here must share
+    # one compiled function, so it stays out of cache_key() (R6).
+    prefetch_depth: int = 0
     predicted_bytes: int = 0
     predicted_cost: float = 0.0
     reason: str = ""
@@ -509,7 +516,8 @@ class Admission:
 
 def admit_session(n_nodes: int, resources: Resources | None = None, *,
                   bytes_in_use: int = 0, window_epochs: int = 0,
-                  priority: int = 0, actives=None) -> Admission:
+                  priority: int = 0, actives=None,
+                  prefetch_depth: int = 0) -> Admission:
     """Decide whether one more concurrent stream of ``n_nodes`` nodes fits.
 
     A stream session pins its adjacency-so-far bitset for its whole lifetime
@@ -536,12 +544,35 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
     most freed bytes). Equal-priority actives are never preempted (no
     priority-tie thrashing); with ``actives=None`` (or no eligible victims)
     the verdict degrades to plain admit/queue exactly as before.
+
+    ``prefetch_depth=K`` charges the async prefetch pipeline's transient
+    buffers up front — up to K device-ready padded (block, 2) int32 blocks
+    plus as many again raw in the command queue — by SHRINKING the budget
+    the state-sizing sweep sees. The returned plan records the depth
+    (admission-only field, outside ``cache_key()``): a session admitted
+    with prefetch has its in-flight blocks paid for, so a full pipeline can
+    never overcommit the device past what admission approved.
     """
     res = resources or Resources()
     remaining = max(res.memory_bytes - bytes_in_use, 0)
     stats = GraphStats(n_nodes=n_nodes, n_edges=0, replication_factor=0,
                        max_degree=0, max_fwd_degree=0, edges_in_memory=False)
+    prefetch_bytes = 0
+    if prefetch_depth:
+        _, blk, _ = stream_sizing(
+            stats, dataclasses.replace(res, memory_bytes=remaining),
+            window_epochs=window_epochs)
+        prefetch_bytes = 2 * int(prefetch_depth) * blk * 2 * 4
+        remaining = max(remaining - prefetch_bytes, 0)
     sub = dataclasses.replace(res, memory_bytes=remaining)
+
+    def _stamp(adm: Admission) -> Admission:
+        """Record the admitted prefetch depth on the plan (admission-only
+        field — the compiled ingest is depth-independent)."""
+        if prefetch_depth and adm.plan is not None:
+            adm = dataclasses.replace(adm, plan=dataclasses.replace(
+                adm.plan, prefetch_depth=int(prefetch_depth)))
+        return adm
     n_stages, _, shard_bytes = stream_sizing(stats, sub,
                                              window_epochs=window_epochs)
     window = f"windowed ({window_epochs} epochs) " if window_epochs else ""
@@ -553,7 +584,7 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
         # rule (bitset does not fit sub), so plan and charge stay consistent.
         hyb = None if window_epochs else hybrid_sizing(stats, sub)
         if hyb is not None and hyb.state_bytes <= remaining:
-            return Admission(
+            return _stamp(Admission(
                 action="admit-hybrid",
                 plan=plan(stats, sub, window_epochs=window_epochs),
                 state_bytes=hyb.state_bytes,
@@ -562,7 +593,7 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
                         f"({hyb.hub_slots} hub rows + {hyb.tail_capacity}-slot "
                         f"tail buffers) fits {hyb.state_bytes} B into the "
                         f"{remaining} B remaining "
-                        f"({bytes_in_use} B already pinned)"))
+                        f"({bytes_in_use} B already pinned)")))
         # preemption sweep: grow the budget victim by victim (lowest
         # priority, then largest state) until the request's shard — bitset
         # first, hybrid as the same fallback — fits
@@ -584,7 +615,7 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
             elif hyb_k is not None and hyb_k.state_bytes <= remaining + freed:
                 fit_bytes = hyb_k.state_bytes
             if fit_bytes is not None:
-                return Admission(
+                return _stamp(Admission(
                     action="preempt",
                     plan=plan(stats, sub_k, window_epochs=window_epochs),
                     state_bytes=fit_bytes, victims=tuple(victims),
@@ -592,7 +623,7 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
                             f"fits only after checkpointing {len(victims)} "
                             f"lower-priority active(s) ({freed} B freed, "
                             f"priority {priority} over "
-                            f"{[actives[i][1] for i in victims]})"))
+                            f"{[actives[i][1] for i in victims]})")))
         return Admission(
             action="queue", plan=None, state_bytes=shard_bytes,
             reason=(f"{window}state shard needs {shard_bytes} B but "
@@ -602,14 +633,20 @@ def admit_session(n_nodes: int, resources: Resources | None = None, *,
                        f"fit either" if hyb is not None else "")
                     + (f"; preempting all {len(eligible)} lower-priority "
                        f"active(s) frees only {freed} B" if eligible else "")
+                    + (f" ({prefetch_bytes} B reserved for the depth-"
+                       f"{prefetch_depth} prefetch pipeline)"
+                       if prefetch_bytes else "")
                     + ") — queue until an active session closes"))
     kind = "sharded" if n_stages > 1 else "dense"
-    return Admission(
+    return _stamp(Admission(
         action=f"admit-{kind}",
         plan=plan(stats, sub, window_epochs=window_epochs),
         state_bytes=shard_bytes,
         reason=(f"admit-{kind}: {window}{shard_bytes} B/stage state fits the "
-                f"{remaining} B remaining ({bytes_in_use} B already pinned)"))
+                f"{remaining} B remaining ({bytes_in_use} B already pinned"
+                + (f"; {prefetch_bytes} B reserved for the depth-"
+                   f"{prefetch_depth} prefetch pipeline)" if prefetch_bytes
+                   else ")"))))
 
 
 # --------------------------------------------------------------------------

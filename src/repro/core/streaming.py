@@ -62,6 +62,7 @@ still-live edge are duplicates; an edge re-inserted after expiry is new).
 """
 from __future__ import annotations
 
+import threading
 from functools import lru_cache, partial
 
 import jax
@@ -441,9 +442,9 @@ def window_count(state: dict):
     return state["counts"].sum(dtype=state["counts"].dtype)
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
-def ingest_block(state: dict, edges: jax.Array, *, use_kernel: bool = False,
-                 interpret: bool = True) -> dict:
+def _ingest_block_impl(state: dict, edges: jax.Array, *,
+                       use_kernel: bool = False,
+                       interpret: bool = True) -> dict:
     """Fold one (B, 2) int32 edge block (phantom rows: id >= n_nodes) with the
     two-phase blocked ingest. Duplicate edges are ignored (the paper's
     simple-graph precondition); self-loops contribute nothing.
@@ -452,7 +453,12 @@ def ingest_block(state: dict, edges: jax.Array, *, use_kernel: bool = False,
     block working set ~8 gathered word-rows per edge). Trace contract: one
     trace per (block shape, n, backend flags) — module-level jit, so every
     stream and session sharing a block shape shares ONE trace
-    (``ingest_trace_count`` telemetry)."""
+    (``ingest_trace_count`` telemetry). ``ingest_block_donated`` is the same
+    body jitted with ``donate_argnums=(0,)``: the input state's buffers are
+    aliased into the output, so steady-state ingest allocates NOTHING — the
+    caller must rebind (``state = fn(state, block)``) and never touch the
+    old dict again. The donated and plain jits are separate compiled
+    objects; a session path must pick ONE to keep the one-trace pins."""
     _INGEST_TRACES[0] += 1
     adj = state["adj"]
     n = adj.shape[0]
@@ -463,8 +469,14 @@ def ingest_block(state: dict, edges: jax.Array, *, use_kernel: bool = False,
     return {"adj": adj, "count": _combine(state["count"], terms)}
 
 
-@jax.jit
-def ingest_block_sharded(state: dict, edges: jax.Array) -> dict:
+_INGEST_STATICS = ("use_kernel", "interpret")
+ingest_block = partial(jax.jit, static_argnames=_INGEST_STATICS)(
+    _ingest_block_impl)
+ingest_block_donated = partial(jax.jit, static_argnames=_INGEST_STATICS,
+                               donate_argnums=(0,))(_ingest_block_impl)
+
+
+def _ingest_block_sharded_impl(state: dict, edges: jax.Array) -> dict:
     """Ring-sharded ingest, single-host emulation: vmap over the stage axis
     stands in for the device ring, sum over stages for the psum. Exercises
     the exact word-shard decomposition the mesh path runs under shard_map
@@ -483,6 +495,11 @@ def ingest_block_sharded(state: dict, edges: jax.Array) -> dict:
     live = keep & (seen == 0)
     adj, terms = jax.vmap(lambda a, o: _stage_update(a, lo, hi, live, o))(adj, offs)
     return {"adj": adj, "count": _combine(state["count"], terms.sum(0))}
+
+
+ingest_block_sharded = jax.jit(_ingest_block_sharded_impl)
+ingest_block_sharded_donated = jax.jit(_ingest_block_sharded_impl,
+                                       donate_argnums=(0,))
 
 
 @lru_cache(maxsize=32)
@@ -525,10 +542,9 @@ def make_mesh_ingest(mesh, axis_name: str | None = None, *,
 # --------------------------------------------------------------------------
 # Sliding-window ingest: the epoch ring (dense / emulated-sharded / mesh)
 # --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
-def ingest_block_windowed(state: dict, edges: jax.Array, *,
-                          use_kernel: bool = False,
-                          interpret: bool = True) -> dict:
+def _ingest_block_windowed_impl(state: dict, edges: jax.Array, *,
+                                use_kernel: bool = False,
+                                interpret: bool = True) -> dict:
     """Fold one (B, 2) int32 edge block into the CURRENT epoch of a windowed
     state (``init_windowed_state``; phantom rows: id >= n_nodes).
 
@@ -559,8 +575,14 @@ def ingest_block_windowed(state: dict, edges: jax.Array, *,
             "head": state["head"]}
 
 
-@jax.jit
-def ingest_block_windowed_sharded(state: dict, edges: jax.Array) -> dict:
+ingest_block_windowed = partial(jax.jit, static_argnames=_INGEST_STATICS)(
+    _ingest_block_windowed_impl)
+ingest_block_windowed_donated = partial(
+    jax.jit, static_argnames=_INGEST_STATICS,
+    donate_argnums=(0,))(_ingest_block_windowed_impl)
+
+
+def _ingest_block_windowed_sharded_impl(state: dict, edges: jax.Array) -> dict:
     """Ring-sharded windowed ingest, single-host emulation: vmap over the
     stage axis stands in for the device ring (all S shards on this device —
     E·n²/8 bytes total, not per stage), sum over stages for the psum. The
@@ -584,6 +606,11 @@ def ingest_block_windowed_sharded(state: dict, edges: jax.Array) -> dict:
     return {"epochs": epochs,
             "counts": _windowed_combine(state["counts"], terms.sum(0), head),
             "head": head}
+
+
+ingest_block_windowed_sharded = jax.jit(_ingest_block_windowed_sharded_impl)
+ingest_block_windowed_sharded_donated = jax.jit(
+    _ingest_block_windowed_sharded_impl, donate_argnums=(0,))
 
 
 @lru_cache(maxsize=32)
@@ -812,9 +839,8 @@ def _tail_rows(nbrs: jax.Array, n: int, w: int) -> jax.Array:
         jnp.arange(r)[:, None], col].add(bit)
 
 
-@partial(jax.jit, static_argnames=("hub_threshold",))
-def ingest_block_hybrid(state: dict, edges: jax.Array, *,
-                        hub_threshold: int) -> dict:
+def _ingest_block_hybrid_impl(state: dict, edges: jax.Array, *,
+                              hub_threshold: int) -> dict:
     """Fold one (B, 2) int32 edge block into the HYBRID state — the same
     two-phase ``pre + mixed//2 + dd//3`` contract as ``ingest_block``, bit
     for bit, without ever materializing an (n, W) table.
@@ -981,6 +1007,13 @@ def ingest_block_hybrid(state: dict, edges: jax.Array, *,
             "tail_nbr": tail_nbr, "deg": deg, "count": count, "lost": lost}
 
 
+ingest_block_hybrid = partial(jax.jit, static_argnames=("hub_threshold",))(
+    _ingest_block_hybrid_impl)
+ingest_block_hybrid_donated = partial(
+    jax.jit, static_argnames=("hub_threshold",),
+    donate_argnums=(0,))(_ingest_block_hybrid_impl)
+
+
 def hybrid_lost(state: dict) -> int:
     """Host-synced dropped-endpoint counter of a hybrid state — must be 0
     for the count to be exact; every finalize/checkpoint path raises when it
@@ -1030,6 +1063,17 @@ class BlockBuffer:
     device state is whoever consumes the emitted blocks. Emitting one fixed
     shape is what holds the one-ingest-trace-per-stream contract — every
     shape this buffer emits is one (shared, module-level) ingest trace.
+
+    OWNERSHIP (single producer, single consumer — enforced): at any moment
+    exactly ONE thread may be inside a mutating call (``push`` / ``flush`` /
+    ``set_block_size``). The async prefetch driver transfers ownership at
+    its quiesce barrier: the producer thread owns the buffer while prefetch
+    is live, the drive thread reclaims it after the barrier (checkpoint /
+    finalize / advance flush the tail from the drive thread). Overlapping
+    mutators used to corrupt the sticky tail SILENTLY (two flushes racing on
+    ``_buf``/``_tail_target``); now any mutating call that finds another one
+    in flight raises ``RuntimeError`` immediately — the guard is a
+    non-blocking try-lock, never a wait, so it cannot deadlock.
     """
 
     def __init__(self, n_nodes: int, block_size: int | None = None):
@@ -1039,6 +1083,16 @@ class BlockBuffer:
         self._buffered = 0
         self._emitted_full = False
         self._tail_target = 0  # sticky pow2 tail shape across repeated flushes
+        self._owner = threading.Lock()  # SPSC guard: held only DURING a call
+
+    def _acquire(self, op: str):
+        if not self._owner.acquire(blocking=False):
+            raise RuntimeError(
+                f"BlockBuffer.{op}() while another mutating call is in "
+                f"flight — the buffer is single-producer/single-consumer; "
+                f"concurrent push/flush silently corrupts the sticky tail "
+                f"(quiesce the prefetch driver before touching the buffer "
+                f"from another thread)")
 
     def export_shape_state(self) -> dict:
         """The re-blocking continuity a session checkpoint must carry: the
@@ -1059,16 +1113,7 @@ class BlockBuffer:
         self._tail_target = shape_state["tail_target"]
         self._emitted_full = shape_state["emitted_full"]
 
-    def push(self, block) -> list[jax.Array]:
-        """Buffer ``block``; return every full ``block_size`` block it
-        completed (possibly none)."""
-        b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
-        if len(b) == 0:
-            return []
-        if self.block_size is None:
-            self.block_size = len(b)
-        self._buf.append(b)
-        self._buffered += len(b)
+    def _drain(self) -> list[jax.Array]:
         out: list[jax.Array] = []
         while self._buffered >= self.block_size:
             flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
@@ -1078,27 +1123,123 @@ class BlockBuffer:
             out.append(jnp.asarray(chunk))
         return out
 
+    def push(self, block) -> list[jax.Array]:
+        """Buffer ``block``; return every full ``block_size`` block it
+        completed (possibly none). Raises ``RuntimeError`` when another
+        mutating call is in flight (SPSC ownership — see the class
+        docstring)."""
+        self._acquire("push")
+        try:
+            b = np.asarray(block, dtype=np.int32).reshape(-1, 2)
+            if len(b) == 0:
+                return []
+            if self.block_size is None:
+                self.block_size = len(b)
+            self._buf.append(b)
+            self._buffered += len(b)
+            return self._drain()
+        finally:
+            self._owner.release()
+
+    def set_block_size(self, block_size: int) -> list[jax.Array]:
+        """Adaptive re-blocking: switch the emitted full-block shape from
+        the NEXT block on (already-emitted blocks keep their shape; counts
+        are invariant to re-blocking, so this never changes a result). The
+        buffered remainder re-chunks immediately — any blocks the new size
+        completes are returned just like :meth:`push`. Each distinct size is
+        one (module-level, shared) ingest trace; callers bound the sizes to
+        pow2 steps of one bucket (``AdaptiveBlockSizer``), so the trace cost
+        is log2-bounded."""
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self._acquire("set_block_size")
+        try:
+            self.block_size = int(block_size)
+            self._emitted_full = False  # let a small tail keep its pow2 shape
+            return self._drain()
+        finally:
+            self._owner.release()
+
     def flush(self) -> jax.Array | None:
         """The padded tail block (None if nothing is buffered). Call at end
         of stream — or at every epoch boundary for a windowed session: the
         power-of-two tail shape is STICKY (remembered and only ever grown),
         so repeated flushes of similar-size tails reuse one shape, hence one
         ingest trace (distinct shapes only when a tail outgrows every
-        earlier one — log2-bounded)."""
-        if not self._buffered:
+        earlier one — log2-bounded). Raises ``RuntimeError`` when another
+        mutating call is in flight (SPSC ownership)."""
+        self._acquire("flush")
+        try:
+            if not self._buffered:
+                return None
+            flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
+            self._buf, self._buffered = [], 0
+            if self._emitted_full:
+                target = self.block_size
+            else:  # never filled a block: one power-of-two shape, not block_size
+                target = max(self._tail_target, 8)
+                while target < min(len(flat), self.block_size):
+                    target *= 2
+                target = min(target, self.block_size)
+                self._tail_target = target
+            pad = np.full((target - len(flat), 2), self.n_nodes, np.int32)
+            return jnp.asarray(np.concatenate([flat, pad]))
+        finally:
+            self._owner.release()
+
+
+class AdaptiveBlockSizer:
+    """Grow/shrink the ingest block size from observed wall-clock — the
+    paper's dynamic-pipeline "growing and shrinking" analogue, applied to
+    re-blocking: a block that dispatches too fast is dominated by per-call
+    overhead (grow ×2 to amortize it), one that runs too long hurts latency
+    and working-set (shrink ÷2).
+
+    Sizes move in POWER-OF-TWO steps inside ``[lo, hi]`` where ``hi`` is the
+    plan's block size (never exceed what the planner budgeted for the block
+    working set) and ``lo`` defaults to ``max(hi // 8, 256)`` — so at most
+    ``log2(hi/lo) + 1`` distinct shapes can ever be proposed, keeping the
+    trace cost bounded. ``observe(n_edges, wall_s)`` feeds one measured
+    ingest; a resize is proposed only after ``patience`` consecutive
+    observations agree (hysteresis — one slow GC pause must not thrash the
+    shape). Returns the new size when a change is due, else None. Pure host
+    arithmetic; traces nothing, thread-free (the caller serializes calls)."""
+
+    def __init__(self, plan_block_size: int, *, lo: int | None = None,
+                 low_s: float = 2e-3, high_s: float = 20e-3,
+                 patience: int = 3):
+        hi = 1 << max(int(plan_block_size) - 1, 0).bit_length()  # pow2 >= plan
+        self.hi = max(hi, 1)
+        self.lo = max(1, min(lo if lo is not None else max(hi // 8, 256),
+                             self.hi))
+        self.low_s = low_s
+        self.high_s = high_s
+        self.patience = patience
+        self.size = self.hi
+        self._streak = 0  # +k fast observations in a row, -k slow
+
+    def observe(self, n_edges: int, wall_s: float) -> int | None:
+        """One measured ingest of ``n_edges`` rows in ``wall_s`` seconds.
+        Returns the NEW block size when ``patience`` consecutive
+        observations agree a resize helps (caller applies it via
+        ``BlockBuffer.set_block_size``), else None."""
+        if n_edges <= 0:
             return None
-        flat = np.concatenate(self._buf) if len(self._buf) > 1 else self._buf[0]
-        self._buf, self._buffered = [], 0
-        if self._emitted_full:
-            target = self.block_size
-        else:  # never filled a block: one power-of-two shape, not block_size
-            target = max(self._tail_target, 8)
-            while target < min(len(flat), self.block_size):
-                target *= 2
-            target = min(target, self.block_size)
-            self._tail_target = target
-        pad = np.full((target - len(flat), 2), self.n_nodes, np.int32)
-        return jnp.asarray(np.concatenate([flat, pad]))
+        if wall_s < self.low_s and self.size * 2 <= self.hi:
+            self._streak = self._streak + 1 if self._streak > 0 else 1
+            if self._streak >= self.patience:
+                self._streak = 0
+                self.size *= 2
+                return self.size
+        elif wall_s > self.high_s and self.size // 2 >= self.lo:
+            self._streak = self._streak - 1 if self._streak < 0 else -1
+            if -self._streak >= self.patience:
+                self._streak = 0
+                self.size //= 2
+                return self.size
+        else:
+            self._streak = 0
+        return None
 
 
 def padded_blocks(blocks, n_nodes: int, block_size: int | None = None):

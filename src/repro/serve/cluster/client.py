@@ -44,6 +44,7 @@ class WorkerClient:
     @classmethod
     def spawn(cls, *, memory_bytes: int, devices: int = 1,
               max_stages: int | None = None, block_size: int | None = None,
+              prefetch_depth: int | None = None,
               startup_timeout_s: float = 180.0) -> "WorkerClient":
         """Start a worker subprocess and complete the spawn handshake.
 
@@ -72,6 +73,8 @@ class WorkerClient:
             cmd += ["--max-stages", str(int(max_stages))]
         if block_size is not None:
             cmd += ["--block-size", str(int(block_size))]
+        if prefetch_depth is not None:
+            cmd += ["--prefetch-depth", str(int(prefetch_depth))]
         proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.DEVNULL, env=env, text=True)
         deadline = time.monotonic() + startup_timeout_s

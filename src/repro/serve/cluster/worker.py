@@ -52,6 +52,9 @@ def _parse(argv):
                     help="planner ring-width cap (default: --devices)")
     ap.add_argument("--block-size", type=int, default=0,
                     help="uniform default ingest block size (0 = planner's)")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="async prefetch pipeline depth per session "
+                         "(0 = synchronous drive loop)")
     return ap.parse_args(argv)
 
 
@@ -70,7 +73,8 @@ def _build_mux(args):
                     max_stages=(args.max_stages if args.max_stages is not None
                                 else args.devices))
     counter = TriangleCounter(res, mesh=mesh)
-    mux = StreamMultiplexer(counter, block_size=args.block_size or None)
+    mux = StreamMultiplexer(counter, block_size=args.block_size or None,
+                            prefetch_depth=args.prefetch_depth or None)
     mesh_devices = int(mesh.devices.size) if mesh is not None else 0
     return mux, res, mesh_devices
 

@@ -101,13 +101,21 @@ class TriangleServer:
     """
 
     def __init__(self, resources=None, serve_cfg: TriangleServeConfig | None = None,
-                 mesh=None):
+                 mesh=None, prefetch_depth: int | None = None,
+                 adaptive_block: bool = False):
         from repro.api import TriangleCounter
         from repro.serve.sessions import StreamMultiplexer
 
         self.counter = TriangleCounter(resources, mesh=mesh)
         self.cfg = serve_cfg or TriangleServeConfig()
-        self.streams = StreamMultiplexer(self.counter)
+        # prefetch_depth=K gives every streaming session an async prefetch
+        # pipeline (background host re-blocking overlapping device ingest,
+        # K-deep device-ready queue — see serve.sessions); None keeps the
+        # synchronous drive loop. adaptive_block additionally lets each
+        # pipeline grow/shrink its block size from observed ingest wall-clock.
+        self.streams = StreamMultiplexer(self.counter,
+                                         prefetch_depth=prefetch_depth,
+                                         adaptive_block=adaptive_block)
 
     def serve(self, graphs: list) -> list:
         from repro.api import CountResult, bucket

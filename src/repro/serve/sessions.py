@@ -47,19 +47,44 @@ slides one session's window without touching its neighbours. Checkpoints
 capture the whole epoch ring (plus the re-blocking cursor), so preemption
 is legal mid-window.
 
-Single-driver concurrency: sessions are interleavable from one thread (the
-serve loop), not thread-safe.
+ASYNC PREFETCH (``prefetch_depth=K``): each active session gets a
+:class:`_PrefetchDriver` — one background ``PropagatingThread`` that owns
+the session's host half (edge validation happened at the front door;
+the thread runs ``StreamSession.reblock``: BlockBuffer coalescing +
+pow2 padding) and hands already-device-ready blocks to the drive thread
+through a BOUNDED queue of depth K. The drive thread only dispatches
+ingest, so host re-blocking of block i+1 overlaps the device's ingest of
+block i — the paper's pipeline-parallelism argument applied to serving.
+Both queues are bounded (K and 2K), every blocking wait is watchdog-bounded
+(``_PrefetchDriver._JOIN_TIMEOUT``), and producer exceptions propagate to
+the drive thread at the next submit/barrier via ``PropagatingThread.join``.
+Because both queues are FIFO and one thread owns each half, the device-op
+sequence is IDENTICAL to the synchronous path — async counts and
+checkpoints are bit-identical to sync, which ``tests/test_async_serving.py``
+enforces differentially under seeded timing jitter. Scheduling points that
+need the exact synchronous state (checkpoint, preempt, evict, close)
+BARRIER the driver first: every in-flight prefetched block is drained into
+the device state before the snapshot, so restores stay bit-identical and
+trace-free; ``kill()`` is the SIGKILL analogue that drops in-flight blocks
+on the floor without ever blocking past the watchdog.
+
+Single-driver concurrency: the multiplexer itself is still driven from one
+thread (the serve loop); the prefetch threads it owns never touch scheduler
+state — they speak to their session only through the public producer-half
+API (``reblock``/``flush_ready``/``set_block_size``).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import queue
+import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils import count_dtype
+from repro.utils import PropagatingThread, count_dtype
 
 # Epoch marker in a waiting session's host-side buffer: replayed as advance()
 # so a windowed request admitted late still sees its epoch boundaries.
@@ -90,11 +115,247 @@ class _Session:
     state_bytes: int = 0
     n_preempts: int = 0
     served_blocks: int = 0
+    # live async prefetch pipeline (None on the synchronous path or while
+    # the session is waiting — drivers exist only for ACTIVE sessions)
+    driver: object | None = None
     # parked = deliberately benched (explicit preempt / deadline reap): the
     # scheduler leaves it out of readmission sweeps until new activity marks
     # it live again (or close() forces the restore). Victims of a
     # priority-preemption are NOT parked — they readmit transparently.
     parked: bool = False
+
+
+class _PrefetchDriver:
+    """Per-session async prefetch pipeline: a producer thread re-blocks raw
+    edges into device-ready padded blocks; the drive thread only dispatches
+    ingest.
+
+    OWNERSHIP. The producer thread owns the session's HOST half — it is the
+    only caller of ``reblock``/``flush_ready``/``set_block_size`` (all
+    BlockBuffer mutations, guarded by the buffer's SPSC lock). The drive
+    thread owns the DEVICE half — it is the only caller of
+    ``ingest_ready``/``expire_ready``. Commands flow producer-ward through
+    ``_in`` (bounded at 2·depth); device-ready blocks flow back through
+    ``_ready`` (bounded at ``depth`` — the double-buffer depth that caps how
+    far the host may run ahead). Both queues are FIFO and each half is
+    single-threaded, so the device-op sequence is exactly the synchronous
+    one: async counts are bit-identical to sync by construction.
+
+    DEADLOCK FREEDOM. Every blocking wait is bounded: the drive thread pumps
+    ``_ready`` while waiting for ``_in`` space (so a full pipeline always
+    drains), the producer drops its output when killed, and every loop
+    carries a ``_JOIN_TIMEOUT`` watchdog that raises loudly instead of
+    hanging. Producer exceptions are re-raised on the drive thread by
+    ``PropagatingThread.join`` at the next submit/barrier/shutdown.
+
+    LIFECYCLE. ``barrier()`` drains the whole pipeline (producer idle,
+    ``_ready`` empty, every block ingested) — after it the session state is
+    bit-identical to a synchronous driver's, which is what checkpoint /
+    preempt / close stand on. ``shutdown()`` is barrier-then-join;
+    ``kill()`` is the SIGKILL analogue — in-flight blocks are dropped, the
+    thread is woken and joined within the watchdog, and nothing raises."""
+
+    _JOIN_TIMEOUT = 30.0  # seconds; tests shrink this to fail fast
+
+    def __init__(self, session, depth: int, *, adaptive: bool = False,
+                 jitter=None):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.session = session
+        self.depth = int(depth)
+        self._in = queue.Queue(maxsize=2 * self.depth)
+        self._ready = queue.Queue(maxsize=self.depth)
+        # in-flight accounting for the barrier fast path: the drive thread
+        # bumps _n_submitted per command, the producer bumps _n_done AFTER a
+        # command's outputs are all in _ready — equal counters + empty ready
+        # queue means the pipeline is provably quiescent (single submitter,
+        # GIL-atomic int bumps), so a barrier on a drained pipeline is O(1)
+        # instead of an Event round-trip through the producer thread
+        self._n_submitted = 0
+        self._n_done = 0
+        self._dead = False
+        self._jitter = jitter          # test hook: seeded timing perturbation
+        self._pending_resize = None
+        if adaptive:
+            from repro.core import streaming
+
+            self._sizer = streaming.AdaptiveBlockSizer(session.block_size)
+        else:
+            self._sizer = None
+        self._thread = PropagatingThread(
+            target=self._produce, name=f"prefetch-{id(session):x}",
+            daemon=True)
+        self._thread.start()
+
+    # -- producer thread ---------------------------------------------------
+    def _produce(self) -> None:
+        while not self._dead:
+            kind, payload = self._in.get()
+            if kind == "stop":
+                return
+            if self._jitter is not None:
+                self._jitter()
+            if kind == "edges":
+                for b in self.session.reblock(payload):
+                    self._put_ready(("block", b))
+            elif kind == "advance":
+                # flush the closing epoch's tail BEFORE the expiry marker so
+                # the consumer replays exactly the synchronous order
+                tail = self.session.flush_ready()
+                if tail is not None:
+                    self._put_ready(("block", tail))
+                self._put_ready(("advance", None))
+            elif kind == "resize":
+                for b in self.session.set_block_size(payload):
+                    self._put_ready(("block", b))
+            elif kind == "sync":
+                self._put_ready(("sync", payload))
+            self._n_done += 1  # outputs are queued: the command is done
+
+    def _put_ready(self, item) -> None:
+        while not self._dead:
+            try:
+                self._ready.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    # -- drive (consumer) thread -------------------------------------------
+    def submit(self, edges) -> None:
+        """Enqueue one validated (B, 2) edge array for background
+        re-blocking, then opportunistically dispatch whatever blocks are
+        already device-ready. Blocks (watchdog-bounded) only when the whole
+        pipeline is full — and then it drains ``_ready`` while waiting, so
+        a full pipeline always makes progress."""
+        if self._pending_resize is not None:
+            size, self._pending_resize = self._pending_resize, None
+            self._submit(("resize", size))
+        self._submit(("edges", edges))
+        self.pump()
+
+    def advance(self) -> None:
+        """Enqueue an epoch boundary (tail flush + window slide), in order
+        with the edges submitted around it."""
+        self._submit(("advance", None))
+        self.pump()
+
+    def _submit(self, item) -> None:
+        deadline = time.monotonic() + self._JOIN_TIMEOUT
+        while True:
+            self._check_producer()
+            try:
+                self._in.put(item, timeout=0.02)
+                self._n_submitted += 1
+                return
+            except queue.Full:
+                self.pump()
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"prefetch watchdog: command queue still full after "
+                        f"{self._JOIN_TIMEOUT}s — producer thread wedged?")
+
+    def pump(self) -> None:
+        """Dispatch every block that is device-ready RIGHT NOW (non-blocking
+        — this is the overlap: the producer keeps re-blocking while these
+        ingests dispatch)."""
+        while True:
+            try:
+                item = self._ready.get_nowait()
+            except queue.Empty:
+                return
+            self._dispatch(item)
+
+    def _dispatch(self, item) -> None:
+        kind, payload = item
+        if kind == "block":
+            if self._sizer is None:
+                self.session.ingest_ready(payload)
+                return
+            t0 = time.perf_counter()
+            self.session.ingest_ready(payload)
+            new = self._sizer.observe(len(payload),
+                                      time.perf_counter() - t0)
+            if new is not None:
+                self._pending_resize = new
+        elif kind == "advance":
+            self.session.expire_ready()
+        else:  # sync marker
+            payload.set()
+
+    def barrier(self) -> None:
+        """Drain the pipeline completely: returns with the producer idle,
+        both queues empty, and every submitted edge ingested — the session
+        state is now exactly what a synchronous driver would hold, and
+        buffer ownership is back with the calling thread until the next
+        ``submit``. Raises (via the watchdog or the producer's propagated
+        exception) instead of hanging."""
+        if self._n_submitted == self._n_done:
+            # fast path: every command finished. _n_submitted cannot move
+            # (we ARE the only submitter) and an idle producer adds nothing
+            # to _ready, so drain-and-return is race-free.
+            self.pump()
+            if self._n_submitted == self._n_done and self._ready.empty():
+                self._check_producer()
+                return
+        done = threading.Event()
+        self._submit(("sync", done))
+        deadline = time.monotonic() + self._JOIN_TIMEOUT
+        while not done.is_set():
+            self._check_producer()
+            try:
+                item = self._ready.get(timeout=0.05)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"prefetch watchdog: barrier not reached after "
+                        f"{self._JOIN_TIMEOUT}s — producer thread wedged?")
+                continue
+            self._dispatch(item)
+
+    def shutdown(self) -> None:
+        """Graceful stop after a ``barrier()``: the producer exits and is
+        joined (re-raising any stored exception); raises if it will not die
+        within the watchdog."""
+        self._submit(("stop", None))
+        self._thread.join(self._JOIN_TIMEOUT)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                f"prefetch watchdog: producer thread failed to stop within "
+                f"{self._JOIN_TIMEOUT}s")
+
+    def kill(self) -> None:
+        """SIGKILL analogue: drop all in-flight work (raw AND device-ready
+        blocks are discarded), wake the producer however it is blocked, and
+        join it. Swallows producer exceptions — the session is being
+        destroyed, nobody is listening — and never blocks past the
+        watchdog."""
+        self._dead = True
+        deadline = time.monotonic() + self._JOIN_TIMEOUT
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:  # discard raw items / make room for the stop pill
+                self._in.get_nowait()
+            except queue.Empty:
+                pass
+            try:  # wake a producer blocked on _in.get()
+                self._in.put_nowait(("stop", None))
+            except queue.Full:
+                pass
+            try:  # unblock a producer stuck publishing to a full _ready
+                self._ready.get_nowait()
+            except queue.Empty:
+                pass
+            try:
+                self._thread.join(0.02)
+            except BaseException:
+                pass  # propagated producer exception: the session is dead
+
+    def _check_producer(self) -> None:
+        """Fail fast if the producer died: join(0) re-raises its stored
+        exception on THIS thread (the PropagatingThread contract)."""
+        if not self._thread.is_alive():
+            self._thread.join(0)
+            raise RuntimeError(
+                "prefetch producer thread exited unexpectedly")
 
 
 class CheckpointStore:
@@ -301,15 +562,32 @@ class StreamMultiplexer:
                  spill_dir: str | None = None,
                  spill_budget_bytes: int | None = None,
                  evict: str = "lru",
+                 prefetch_depth: int | None = None,
+                 adaptive_block: bool = False,
+                 prefetch_jitter=None,
                  clock=time.monotonic):
         from repro.api import TriangleCounter
 
         if policy not in ("fair", "fifo"):
             raise ValueError(f"policy must be 'fair' or 'fifo', got {policy!r}")
+        if prefetch_depth is not None and (
+                not isinstance(prefetch_depth, (int, np.integer))
+                or isinstance(prefetch_depth, bool) or prefetch_depth < 1):
+            raise ValueError(
+                f"prefetch_depth must be a positive int (or None for the "
+                f"synchronous path), got {prefetch_depth!r}")
         self.counter = counter or TriangleCounter(resources)
         self.resources = resources or self.counter.resources
         self.block_size = block_size
         self.policy = policy
+        # prefetch_depth=K: every ACTIVE session gets a _PrefetchDriver with
+        # a K-deep device-ready queue (None = synchronous, the old behaviour).
+        # adaptive_block turns on wall-clock-driven block resizing inside the
+        # driver; prefetch_jitter is the concurrency-test hook — a callable
+        # the producer thread invokes per command to perturb timing.
+        self.prefetch_depth = int(prefetch_depth) if prefetch_depth else None
+        self.adaptive_block = bool(adaptive_block)
+        self.prefetch_jitter = prefetch_jitter
         self.queue_budget_bytes = (
             queue_budget_bytes if queue_budget_bytes is not None
             else self.resources.memory_bytes)
@@ -408,7 +686,14 @@ class StreamMultiplexer:
         ``[0, n_nodes)``)."""
         rec = self._rec(sid)
         if rec.state == "active":
-            rec.session.feed(edges)
+            if rec.driver is not None:
+                from repro.core import streaming
+
+                # validate HERE (front-door contract) so the producer thread
+                # only ever sees clean arrays and errors raise in the caller
+                rec.driver.submit(streaming.validate_edges(edges, rec.n_nodes))
+            else:
+                rec.session.feed(edges)
             rec.served_blocks += 1
         else:
             from repro.api.planner import BackpressureError
@@ -437,7 +722,14 @@ class StreamMultiplexer:
         (or restore) reproduces the exact epoch structure."""
         rec = self._rec(sid)
         if rec.state == "active":
-            rec.session.advance()
+            if rec.driver is not None:
+                if not rec.window:
+                    raise RuntimeError(
+                        "advance() is for windowed sessions — open with "
+                        "window=E")
+                rec.driver.advance()
+            else:
+                rec.session.advance()
         else:
             if not rec.window:
                 raise RuntimeError(
@@ -476,12 +768,17 @@ class StreamMultiplexer:
         cluster tier's failover story: the router periodically checkpoints
         sessions to shared storage so a dead worker's streams can be
         resurrected elsewhere. The session stays active and keeps ingesting;
-        the snapshot covers exactly the edges fed so far."""
+        the snapshot covers exactly the edges fed so far. With async
+        prefetch the driver is BARRIERED first (every in-flight block
+        drained into the device state) and keeps running afterwards — the
+        snapshot is bit-identical to the synchronous one."""
         rec = self._rec(sid)
         if rec.state != "active":
             raise RuntimeError(
                 f"session {sid} is {rec.state} — only an active session has "
                 f"device state to checkpoint")
+        if rec.driver is not None:
+            rec.driver.barrier()
         rec.last_activity = self._clock()
         return rec.session.checkpoint()
 
@@ -499,6 +796,7 @@ class StreamMultiplexer:
             raise RuntimeError(
                 f"session {sid} is {rec.state} — only an active session has "
                 f"device state to evict")
+        self._quiesce(rec)
         ckpt = rec.session.checkpoint()
         self.bytes_in_use -= rec.state_bytes
         del self._recs[sid]
@@ -574,6 +872,7 @@ class StreamMultiplexer:
             self._sched["cancellations"] += 1
             result = self._cancel(rec)
         else:
+            self._quiesce(rec)
             session = rec.session
             result = session.finalize()
             self.bytes_in_use -= rec.state_bytes
@@ -582,6 +881,29 @@ class StreamMultiplexer:
             result.stats["restored"] = session.restored
             del self._recs[sid]
             self._results[sid] = result
+        self._admit_pending()
+        return result
+
+    def kill(self, sid: int):
+        """SIGKILL analogue: tear session ``sid`` down NOW, without draining.
+        Its prefetch driver (if any) is killed with blocks still in flight
+        (they are dropped, never ingested), its device bytes are freed, its
+        host buffers and any parked checkpoint are discarded, and the cached
+        result is a zero-count ``CountResult`` with ``stats["cancelled"]``.
+        Never blocks past the driver's join watchdog; every OTHER session —
+        and the shared compile cache — stays fully consistent, which is the
+        abrupt-close contract ``tests/test_async_serving.py`` exercises."""
+        rec = self._rec(sid)
+        if rec.driver is not None:
+            rec.driver.kill()
+            rec.driver = None
+        if rec.state == "active":
+            self.bytes_in_use -= rec.state_bytes
+            rec.session = None
+        elif rec.state == "preempted":
+            self.store.drop(sid)
+        self._sched["cancellations"] += 1
+        result = self._cancel(rec)
         self._admit_pending()
         return result
 
@@ -655,6 +977,26 @@ class StreamMultiplexer:
         return sum(r.state == "preempted" for r in self._recs.values())
 
     # -- internals ---------------------------------------------------------
+    def _attach_driver(self, rec: _Session) -> None:
+        """Give a freshly-ACTIVE session its prefetch pipeline (no-op on the
+        synchronous path). Always called AFTER the synchronous ``_replay`` —
+        buffered blocks replay on the drive thread, so the producer thread
+        starts from a quiescent buffer it then owns."""
+        if self.prefetch_depth:
+            rec.driver = _PrefetchDriver(
+                rec.session, self.prefetch_depth,
+                adaptive=self.adaptive_block, jitter=self.prefetch_jitter)
+
+    def _quiesce(self, rec: _Session) -> None:
+        """Drain and stop ``rec``'s prefetch driver (no-op without one): on
+        return every in-flight block is ingested and the thread is joined,
+        so the session state equals the synchronous driver's — the invariant
+        checkpoint/preempt/evict/close stand on."""
+        drv, rec.driver = rec.driver, None
+        if drv is not None:
+            drv.barrier()
+            drv.shutdown()
+
     def _rec(self, sid: int) -> _Session:
         if sid in self._recs:
             return self._recs[sid]
@@ -699,13 +1041,15 @@ class StreamMultiplexer:
         actives = [(r.state_bytes, r.priority) for r in active] or None
         adm = admit_session(n_nodes, self.resources, bytes_in_use=bytes_in_use,
                             window_epochs=window or 0, priority=priority,
-                            actives=actives)
+                            actives=actives,
+                            prefetch_depth=self.prefetch_depth or 0)
         if (adm.admitted and adm.plan.n_stages > 1
                 and not self.counter.mesh_matches(adm.plan.n_stages)):
             adm = admit_session(
                 n_nodes, dataclasses.replace(self.resources, max_stages=1),
                 bytes_in_use=bytes_in_use, window_epochs=window or 0,
-                priority=priority, actives=actives)
+                priority=priority, actives=actives,
+                prefetch_depth=self.prefetch_depth or 0)
         return adm, [active[i].sid for i in adm.victims]
 
     def _admit(self, rec: _Session, adm) -> None:
@@ -718,6 +1062,7 @@ class StreamMultiplexer:
         self.bytes_in_use += adm.state_bytes
         rec.last_activity = self._clock()
         self._replay(rec)
+        self._attach_driver(rec)
 
     def _replay(self, rec: _Session) -> None:
         """Replay a waiter's host-buffered blocks (and epoch markers as
@@ -736,9 +1081,20 @@ class StreamMultiplexer:
         """Checkpoint every session in ``sids`` into the store — all or
         nothing (``put_all``): checkpointing is non-destructive, so a
         ``BackpressureError`` from a full store leaves every victim still
-        active and the device accounting untouched."""
-        items = [(v, self._recs[v].session.checkpoint()) for v in sids]
-        self.store.put_all(items)
+        active and the device accounting untouched. Victims' prefetch
+        drivers are QUIESCED first (in-flight blocks drained, thread
+        joined), so the parked snapshot is bit-identical to synchronous —
+        and re-attached if the store refuses, so a failed preemption leaves
+        the victims exactly as they were."""
+        for v in sids:
+            self._quiesce(self._recs[v])
+        try:
+            items = [(v, self._recs[v].session.checkpoint()) for v in sids]
+            self.store.put_all(items)
+        except BaseException:
+            for v in sids:
+                self._attach_driver(self._recs[v])
+            raise
         for v in sids:
             r = self._recs[v]
             r.session = None
@@ -756,6 +1112,7 @@ class StreamMultiplexer:
         rec.last_activity = self._clock()
         self._sched["restores"] += 1
         self._replay(rec)
+        self._attach_driver(rec)
 
     def _force_restore(self, rec: _Session) -> None:
         """Restore a preempted session for ``close``: its own checkpoint is
@@ -869,6 +1226,12 @@ class StreamMultiplexer:
                     freed = True
                     continue
                 except BackpressureError:
+                    # cancel outright: the driver (re-attached by the failed
+                    # preemption) dies WITH its in-flight blocks — the
+                    # session is forfeit anyway
+                    if rec.driver is not None:
+                        rec.driver.kill()
+                        rec.driver = None
                     self.bytes_in_use -= rec.state_bytes
                     rec.session = None
             elif rec.state == "preempted":

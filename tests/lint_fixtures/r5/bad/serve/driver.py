@@ -1,5 +1,9 @@
-"""R5 true positives: private reach-in from outside, bare Thread."""
+"""R5 true positives: private reach-in from outside, bare Thread,
+unbounded serve-tier queue, fire-and-forget PropagatingThread."""
+import queue
 import threading
+
+from repro.utils import PropagatingThread
 
 
 def force_close(mux, sid):
@@ -13,5 +17,18 @@ def spy(mux, sid):
 
 def async_write(fn, payload):
     t = threading.Thread(target=fn, args=(payload,))  # BAD: silent failures
+    t.start()
+    return t
+
+
+def unbounded_handoff():
+    q = queue.Queue()  # BAD: no maxsize — buffers toward host OOM
+    return q
+
+
+def fire_and_forget(fn):
+    # BAD: this module never calls .join, so the stored exception is
+    # never re-raised — fails as silently as a bare Thread
+    t = PropagatingThread(target=fn)
     t.start()
     return t

@@ -1,4 +1,7 @@
-"""R5 true negatives: public accessors, PropagatingThread."""
+"""R5 true negatives: public accessors, joined PropagatingThread,
+bounded queues."""
+import queue
+
 from repro.utils import PropagatingThread
 
 
@@ -14,3 +17,12 @@ def async_write(fn, payload):
     t = PropagatingThread(target=fn, args=(payload,))  # OK: join re-raises
     t.start()
     return t
+
+
+def wait_for(t, timeout=5.0):
+    t.join(timeout)  # OK: the join site that makes async_write honest
+    return not t.is_alive()
+
+
+def bounded_handoff(depth):
+    return queue.Queue(maxsize=depth)  # OK: caller-budgeted bound

@@ -1,0 +1,371 @@
+"""Race-freedom proofs for the async double-buffered session driver.
+
+The contract under test: a ``StreamMultiplexer`` with ``prefetch_depth=K``
+(background host re-blocking overlapping device ingest) is OBSERVABLY
+IDENTICAL to the synchronous multiplexer — bit-identical counts AND
+bit-identical checkpoints — across dense / hybrid / windowed layouts,
+through mid-stream checkpoint / preempt / restore, and under seeded
+thread-timing jitter that perturbs the producer/consumer interleaving.
+``ASYNC_SEED`` (env, default 0) reseeds every randomized schedule; CI
+re-runs this module across several seeds so timing-dependent regressions
+surface before merge.
+
+DEADLOCK WATCHDOG: the autouse fixture shrinks the driver's
+``_JOIN_TIMEOUT`` so any wait that would hang tier-1 instead raises a
+loud RuntimeError within seconds — a hanging test IS a failing test here.
+"""
+import os
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api.planner import Resources
+from repro.core import streaming
+from repro.core.triangle_ref import count_triangles_brute
+from repro.graphs import generators as gen
+from repro.serve.sessions import StreamMultiplexer, _PrefetchDriver
+from repro.utils import PropagatingThread
+
+SEED = int(os.environ.get("ASYNC_SEED", "0"))
+
+
+@pytest.fixture(autouse=True)
+def _watchdog(monkeypatch):
+    """Every blocking wait in the driver fails loudly within 20 s instead
+    of hanging the suite."""
+    monkeypatch.setattr(_PrefetchDriver, "_JOIN_TIMEOUT", 20.0)
+
+
+def _jitter(seed, scale=1.5e-3):
+    """Seeded producer-thread timing perturbation: sleeps a random slice of
+    ``scale`` before each command, shuffling the producer/consumer
+    interleaving differently per seed. random.Random is safe under the GIL
+    for the N producer threads sharing it."""
+    rng = random.Random(seed)
+
+    def f():
+        time.sleep(rng.random() * scale)
+    return f
+
+
+def _chunks(edges, rng, lo=5, hi=60):
+    """Split an edge list at seeded ragged boundaries."""
+    out, i = [], 0
+    while i < len(edges):
+        step = int(rng.integers(lo, hi))
+        out.append(edges[i:i + step])
+        i += step
+    return out
+
+
+def _ckpt_equal(a, b):
+    assert set(a.arrays) == set(b.arrays)
+    for k in a.arrays:
+        assert np.array_equal(np.asarray(a.arrays[k]),
+                              np.asarray(b.arrays[k])), f"checkpoint {k}"
+
+
+# ------------------------------------------------------------ differentials
+def test_async_matches_sync_dense():
+    """N dense sessions, seeded ragged feeds + mid-stream checkpoints:
+    async counts AND checkpoints are bit-identical to the sync mux."""
+    rng = np.random.default_rng([SEED, 1])
+    n = 64
+    graphs = [gen.gnp(n, 0.35, seed=SEED * 10 + s) for s in range(4)]
+    feeds = [_chunks(g.edges, rng) for g in graphs]
+    sync = StreamMultiplexer(block_size=32)
+    asyn = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                             prefetch_jitter=_jitter(SEED + 1))
+    s_ids = [sync.open(n) for _ in graphs]
+    a_ids = [asyn.open(n) for _ in graphs]
+    # interleave rounds across sessions, same schedule on both muxes
+    live = [list(f) for f in feeds]
+    rounds = 0
+    while any(live):
+        for i in range(len(graphs)):
+            if live[i]:
+                chunk = live[i].pop(0)
+                sync.feed(s_ids[i], chunk)
+                asyn.feed(a_ids[i], chunk)
+        rounds += 1
+        if rounds == 3:  # mid-stream: snapshots must already agree
+            for i in range(len(graphs)):
+                _ckpt_equal(sync.checkpoint(s_ids[i]),
+                            asyn.checkpoint(a_ids[i]))
+    for i, g in enumerate(graphs):
+        want = count_triangles_brute(g)
+        assert sync.close(s_ids[i]).item() == want
+        assert asyn.close(a_ids[i]).item() == want
+
+
+def test_async_matches_sync_windowed():
+    """Windowed sessions with seeded advances: epoch attribution survives
+    the async reordering-free pipeline bit-identically."""
+    rng = np.random.default_rng([SEED, 2])
+    n = 64
+    g = gen.gnp(n, 0.35, seed=SEED + 3)
+    chunks = _chunks(g.edges, rng, lo=10, hi=40)
+    advance_after = set(rng.choice(len(chunks), size=len(chunks) // 3,
+                                   replace=False).tolist())
+    sync = StreamMultiplexer(block_size=16)
+    asyn = StreamMultiplexer(block_size=16, prefetch_depth=3,
+                             prefetch_jitter=_jitter(SEED + 2))
+    s, a = sync.open(n, window=3), asyn.open(n, window=3)
+    for j, chunk in enumerate(chunks):
+        sync.feed(s, chunk)
+        asyn.feed(a, chunk)
+        if j in advance_after:
+            sync.advance(s)
+            asyn.advance(a)
+    _ckpt_equal(sync.checkpoint(s), asyn.checkpoint(a))
+    assert sync.close(s).item() == asyn.close(a).item()
+
+
+def test_async_matches_sync_hybrid():
+    """Hybrid-layout sessions (admitted by a budget the dense bitset
+    overflows) run the same prefetch pipeline bit-identically."""
+    rng = np.random.default_rng([SEED, 3])
+    n, mem = 4096, 1600 << 10  # dense needs 2 MiB -> admit-hybrid
+    edges = rng.integers(0, n, size=(1500, 2), dtype=np.int32)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    chunks = _chunks(edges, rng, lo=40, hi=120)
+    sync = StreamMultiplexer(resources=Resources(memory_bytes=mem),
+                             block_size=64)
+    asyn = StreamMultiplexer(resources=Resources(memory_bytes=mem),
+                             block_size=64, prefetch_depth=2,
+                             prefetch_jitter=_jitter(SEED + 3))
+    s, a = sync.open(n), asyn.open(n)
+    # both must actually be the linear-in-n hybrid state, not dense
+    assert sync.state_bytes_of(s) < n * n // 8
+    assert asyn.state_bytes_of(a) < n * n // 8
+    for chunk in chunks:
+        sync.feed(s, chunk)
+        asyn.feed(a, chunk)
+    _ckpt_equal(sync.checkpoint(s), asyn.checkpoint(a))
+    assert sync.close(s).item() == asyn.close(a).item()
+
+
+def test_async_preempt_restore_differential():
+    """Mid-stream preempt (driver drained into the snapshot), feeds
+    buffered while parked, restore-on-close: bit-identical to sync."""
+    rng = np.random.default_rng([SEED, 4])
+    n = 64
+    g = gen.gnp(n, 0.35, seed=SEED + 5)
+    chunks = _chunks(g.edges, rng)
+    cut = len(chunks) // 2
+    sync = StreamMultiplexer(block_size=32)
+    asyn = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                             prefetch_jitter=_jitter(SEED + 4))
+    s, a = sync.open(n), asyn.open(n)
+    for chunk in chunks[:cut]:
+        sync.feed(s, chunk)
+        asyn.feed(a, chunk)
+    sync.preempt(s)
+    asyn.preempt(a)  # barrier first: in-flight blocks enter the snapshot
+    assert sync.status(s) == asyn.status(a) == "preempted"
+    for chunk in chunks[cut:]:  # host-buffered, replayed at restore
+        sync.feed(s, chunk)
+        asyn.feed(a, chunk)
+    want = count_triangles_brute(g)
+    assert sync.close(s).item() == want
+    assert asyn.close(a).item() == want
+
+
+def test_async_randomized_mixed_schedule():
+    """The headline fuzz: a seeded random op schedule (ragged feeds,
+    advances, checkpoints, preempts) over a mixed dense+windowed session
+    population, applied verbatim to a sync and an async mux — every count
+    and every snapshot must agree. Reseeded via ASYNC_SEED in CI."""
+    rng = np.random.default_rng([SEED, 5])
+    n = 64
+    graphs = [gen.gnp(n, 0.3, seed=SEED * 7 + s) for s in range(5)]
+    windows = [None, 3, None, 4, None]
+    sync = StreamMultiplexer(block_size=32)
+    asyn = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                             prefetch_jitter=_jitter(SEED + 5))
+    s_ids = [sync.open(n, window=w) for w in windows]
+    a_ids = [asyn.open(n, window=w) for w in windows]
+    feeds = [_chunks(g.edges, rng) for g in graphs]
+    preempted = set()
+    while any(feeds):
+        i = int(rng.integers(0, len(graphs)))
+        if not feeds[i]:
+            continue
+        op = rng.random()
+        if op < 0.70:
+            chunk = feeds[i].pop(0)
+            sync.feed(s_ids[i], chunk)
+            asyn.feed(a_ids[i], chunk)
+        elif op < 0.80 and windows[i] and i not in preempted:
+            sync.advance(s_ids[i])
+            asyn.advance(a_ids[i])
+        elif op < 0.90 and i not in preempted:
+            _ckpt_equal(sync.checkpoint(s_ids[i]),
+                        asyn.checkpoint(a_ids[i]))
+        elif i not in preempted:
+            sync.preempt(s_ids[i])
+            asyn.preempt(a_ids[i])
+            preempted.add(i)  # feeds keep buffering; close restores
+    for i, g in enumerate(graphs):
+        r_s = sync.close(s_ids[i])
+        r_a = asyn.close(a_ids[i])
+        assert r_s.item() == r_a.item()
+        if windows[i] is None:
+            assert r_s.item() == count_triangles_brute(g)
+
+
+# ------------------------------------------------------- lifecycle hazards
+def test_abrupt_kill_leaves_mux_consistent():
+    """SIGKILL-style close: kill() with blocks still in flight must drop
+    them, free the budget, and leave every other session — and the shared
+    compile cache — fully usable. Never hangs (watchdog-bounded join)."""
+    n = 64
+    g = gen.gnp(n, 0.35, seed=SEED + 8)
+    mux = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                            prefetch_jitter=_jitter(SEED + 8, scale=3e-3))
+    victim, survivor = mux.open(n), mux.open(n)
+    for i in range(0, len(g.edges), 17):
+        mux.feed(victim, g.edges[i:i + 17])
+        mux.feed(survivor, g.edges[i:i + 17])
+    res = mux.kill(victim)  # in-flight prefetched blocks die with it
+    assert res.stats["cancelled"]
+    assert mux.status(victim) == "closed"
+    assert mux.close(survivor).item() == count_triangles_brute(g)
+    assert mux.bytes_in_use == 0
+    # the mux is still fully serviceable after the kill
+    sid = mux.open(n)
+    mux.feed(sid, g.edges)
+    assert mux.close(sid).item() == count_triangles_brute(g)
+
+
+def test_producer_exception_propagates_to_drive_thread():
+    """A crash on the producer thread must surface as a raise on the drive
+    thread (PropagatingThread contract), not a silent stall."""
+    n = 64
+    g = gen.gnp(n, 0.3, seed=SEED + 9)
+    boom = [False]
+
+    def exploding_jitter():
+        if boom[0]:
+            raise RuntimeError("injected producer crash")
+
+    mux = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                            prefetch_jitter=exploding_jitter)
+    sid = mux.open(n)
+    mux.feed(sid, g.edges[:100])
+    mux.checkpoint(sid)  # barrier: pipeline healthy so far
+    boom[0] = True
+    with pytest.raises(RuntimeError, match="injected producer crash"):
+        for _ in range(50):  # first feed enqueues; a later one re-raises
+            mux.feed(sid, g.edges[:40])
+            time.sleep(0.01)
+    mux.kill(sid)  # teardown must not hang on the dead producer
+
+
+def test_watchdog_raises_instead_of_hanging(monkeypatch):
+    """A wedged producer (here: blocked forever in the jitter hook) turns
+    into a LOUD RuntimeError from the barrier within the watchdog bound —
+    never a silent tier-1 hang."""
+    monkeypatch.setattr(_PrefetchDriver, "_JOIN_TIMEOUT", 0.5)
+    n = 64
+    g = gen.gnp(n, 0.3, seed=SEED + 10)
+    gate = threading.Event()
+
+    def wedge():
+        gate.wait(30)
+
+    mux = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                            prefetch_jitter=wedge)
+    sid = mux.open(n)
+    mux.feed(sid, g.edges[:64])
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="watchdog"):
+        mux.checkpoint(sid)
+    assert time.monotonic() - t0 < 5.0, "watchdog fired far too late"
+    gate.set()  # unwedge so teardown joins cleanly
+    mux.kill(sid)
+
+
+def test_blockbuffer_concurrent_mutation_raises():
+    """Regression for the latent SPSC hazard: a second thread mutating the
+    BlockBuffer while a push is in flight must get an immediate
+    RuntimeError, not silent tail corruption."""
+    buf = streaming.BlockBuffer(64, block_size=8)
+    entered, release = threading.Event(), threading.Event()
+
+    class _SlowEdges:
+        """Stalls inside push's np.asarray — inside the SPSC guard."""
+
+        def __array__(self, dtype=None, copy=None):
+            entered.set()
+            release.wait(10)
+            return np.zeros((4, 2), np.int32)
+
+    t = PropagatingThread(target=buf.push, args=(_SlowEdges(),))
+    t.start()
+    assert entered.wait(10), "producer never reached the buffer"
+    try:
+        with pytest.raises(RuntimeError, match="single-producer"):
+            buf.flush()
+        with pytest.raises(RuntimeError, match="single-producer"):
+            buf.push(np.zeros((2, 2), np.int32))
+    finally:
+        release.set()
+        t.join(10)
+    assert not t.is_alive()
+    # ownership released: the buffer works normally again
+    assert buf.flush() is not None
+
+
+# -------------------------------------------------- adaptive re-blocking
+def test_adaptive_resize_mid_stream_keeps_counts_exact(monkeypatch):
+    """Drive the driver's resize path deterministically (stub sizer that
+    demands pow2 shrinks/grows at fixed points): counts stay exact because
+    re-blocking boundaries never change the math."""
+
+    class _Schedule:
+        """Stands in for AdaptiveBlockSizer: resize on a fixed schedule."""
+
+        def __init__(self, plan_block_size, **kw):
+            self.sizes = [16, 8, 32]
+            self.seen = 0
+
+        def observe(self, n_edges, wall_s):
+            self.seen += 1
+            if self.seen % 4 == 0 and self.sizes:
+                return self.sizes.pop(0)
+            return None
+
+    monkeypatch.setattr(streaming, "AdaptiveBlockSizer", _Schedule)
+    n = 64
+    g = gen.gnp(n, 0.35, seed=SEED + 11)
+    mux = StreamMultiplexer(block_size=32, prefetch_depth=2,
+                            adaptive_block=True,
+                            prefetch_jitter=_jitter(SEED + 11))
+    sid = mux.open(n)
+    for i in range(0, len(g.edges), 21):
+        mux.feed(sid, g.edges[i:i + 21])
+    assert mux.close(sid).item() == count_triangles_brute(g)
+
+
+def test_adaptive_block_sizer_policy():
+    """The real sizer: grows ×2 after `patience` consecutive fast blocks,
+    shrinks ÷2 after `patience` slow ones, clamps to the [lo, hi] pow2
+    bucket, and mixed signals reset the streak."""
+    s = streaming.AdaptiveBlockSizer(100, lo=32, low_s=2e-3, high_s=20e-3,
+                                     patience=2)
+    assert s.hi == 128 and s.size == 128  # pow2 bucket of the plan size
+    assert s.observe(128, 50e-3) is None  # slow streak 1
+    assert s.observe(128, 50e-3) == 64    # slow streak 2 -> shrink
+    assert s.observe(64, 1e-3) is None
+    assert s.observe(64, 50e-3) is None   # mixed: streak reset
+    assert s.observe(64, 1e-3) is None
+    assert s.observe(64, 1e-3) == 128     # fast streak -> grow back
+    assert s.observe(128, 1e-3) is None
+    assert s.observe(128, 1e-3) is None   # at hi: never grows past bucket
+    for _ in range(10):
+        assert s.observe(128, 50e-3) in (None, 64, 32)
+    assert s.size >= 32                   # lo clamp held

@@ -106,6 +106,24 @@ def test_architecture_documents_multi_host_tier():
         assert term in arch, f"ARCHITECTURE.md multi-host docs lost {term!r}"
 
 
+def test_architecture_documents_async_prefetch():
+    """docs/ARCHITECTURE.md must keep the §Async prefetch contract that
+    tests/test_async_serving.py exercises: the ownership split, the
+    bounded queues, the quiesce lifecycle, and the admission charge."""
+    arch = _read("docs/ARCHITECTURE.md")
+    assert "## Async prefetch" in arch
+    for term in ("prefetch_depth", "PropagatingThread", "quiesce",
+                 "bounded", "donate_argnums", "bit-identical", "kill",
+                 "watchdog"):
+        assert term in arch, f"ARCHITECTURE.md async-prefetch docs lost {term!r}"
+    streaming_doc = _read("docs/STREAMING.md")
+    assert "AdaptiveBlockSizer" in streaming_doc, \
+        "docs/STREAMING.md lost the adaptive re-blocking note"
+    readme = _read("README.md")
+    assert "prefetch_depth" in readme, \
+        "README quickstart lost the prefetch_depth flag"
+
+
 def test_readme_has_cluster_quickstart():
     """README front door must show the cluster tier (and name the failure
     modes a caller has to handle)."""

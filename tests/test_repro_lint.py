@@ -44,7 +44,8 @@ EXPECT_BAD = {
     "R2": (4, ["synchronizes the device", "device round-trip"]),
     "R3": (2, ["no handler", "raise_remote's registry"]),
     "R4": (2, ["never released", "leaks the charge"]),
-    "R5": (3, ["private internals", "threading.Thread"]),
+    "R5": (5, ["private internals", "threading.Thread", "unbounded",
+               "re-raised by", "join"]),
     "R6": (3, ["ADMISSION_ONLY", "executed path reads"]),
 }
 

@@ -149,6 +149,78 @@ def test_hybrid_warm_reopen_retraces_nothing():
     assert c.cache_info["traces"] == traces0
 
 
+def test_async_sessions_share_one_trace():
+    """N ASYNC-PREFETCHING mux sessions, one block shape -> exactly ONE
+    ingest trace. The prefetch pipeline re-blocks on background threads but
+    dispatches through the same shared compile-cache entry, so threading
+    must not cost a single extra compilation."""
+    n, block = 125, 19
+    graphs = [gen.gnp(n, 0.3, seed=40 + s) for s in range(3)]
+    mux = StreamMultiplexer(block_size=block, prefetch_depth=2)
+    before = streaming.ingest_trace_count()
+    sids = [mux.open(n) for _ in graphs]
+    for sid, g in zip(sids, graphs):
+        for b in _blocks(g, block):
+            mux.feed(sid, b)
+    results = [mux.close(sid) for sid in sids]
+    assert streaming.ingest_trace_count() - before == 1
+    for g, r in zip(graphs, results):
+        assert r.item() == count_triangles_brute(g)
+    info = mux.counter.cache_info
+    assert info["traces"] == 1 and info["entries"] == 1
+
+
+def test_async_warm_reopen_retraces_nothing():
+    """Second wave of async sessions on a warm mux — including a mid-stream
+    mux-level checkpoint barrier — must retrace NOTHING."""
+    n, block = 129, 23
+    g = gen.gnp(n, 0.3, seed=9)
+    mux = StreamMultiplexer(block_size=block, prefetch_depth=2)
+    sid = mux.open(n)
+    for b in _blocks(g, block):
+        mux.feed(sid, b)
+    assert mux.close(sid).item() == count_triangles_brute(g)
+    traces0 = mux.counter.cache_info["traces"]
+    before = streaming.ingest_trace_count()
+    for seed in (25, 27):
+        g2 = gen.gnp(n, 0.3, seed=seed)
+        sid = mux.open(n)
+        bs = _blocks(g2, block)
+        for j, b in enumerate(bs):
+            mux.feed(sid, b)
+            if j == len(bs) // 2:
+                mux.checkpoint(sid)  # barrier + snapshot: still trace-free
+        assert mux.close(sid).item() == count_triangles_brute(g2)
+    assert streaming.ingest_trace_count() - before == 0
+    assert mux.counter.cache_info["traces"] == traces0
+
+
+def test_donated_ingest_steady_state_allocates_nothing():
+    """Donation pin: with ``donate_argnums`` on the state operand, warm
+    steady-state ingest reuses the donated buffers — the live-array count
+    is FLAT across feeds and the pre-feed state buffer is actually deleted
+    (donated back), so a session's footprint never grows with traffic."""
+    import jax
+
+    n, block = 131, 35
+    g = gen.gnp(n, 0.3, seed=3)
+    bs = _blocks(g, block)
+    c = TriangleCounter()
+    s = c.open_stream(n, block_size=block)
+    s.feed(bs[0])  # warm the trace and reach steady state
+    jax.block_until_ready(s.state["adj"])
+    old_adj = s.state["adj"]
+    live0 = len(jax.live_arrays())
+    for b in bs[1:]:
+        s.feed(b)
+    jax.block_until_ready(s.state["adj"])
+    assert len(jax.live_arrays()) == live0, \
+        "steady-state ingest allocated new device buffers despite donation"
+    assert old_adj.is_deleted(), \
+        "state operand was not donated — the old buffer is still alive"
+    assert s.finalize().item() == count_triangles_brute(g)
+
+
 def test_windowed_advance_is_trace_free():
     """Sliding the window must not compile anything new: a windowed
     session's whole life (open, feeds, advances, close) costs the same

@@ -1,6 +1,6 @@
 """R5 — shared-state discipline.
 
-Two contracts:
+Four contracts:
 
 - **R5a** the serving tier's stateful classes (``StreamMultiplexer``,
   ``ClusterRouter``, ``CheckpointStore``, ``TriangleCounter``,
@@ -15,6 +15,18 @@ Two contracts:
   thread dies, ``join()`` returns None, and the failure is silent (the
   async checkpoint writer lost write errors exactly this way). Use
   ``repro.utils.PropagatingThread``, which re-raises on ``join()``.
+- **R5c** (``serve/`` modules only) UNBOUNDED queues break the serving
+  tier's every-host-byte-is-budgeted contract: a ``queue.Queue()`` with
+  no ``maxsize`` (or ``maxsize=0``) lets a fast producer buffer toward
+  host OOM with no ``BackpressureError`` anywhere — exactly the failure
+  mode the bounded feed/checkpoint budgets exist to prevent. Give every
+  serving-tier queue an explicit positive bound.
+- **R5d** (``serve/`` modules only) a ``PropagatingThread`` constructed
+  in a module that never calls ``.join`` anywhere defeats the class's
+  whole point — the stored exception is only RE-RAISED by ``join()``, so
+  an unjoined thread fails exactly as silently as a bare ``Thread``.
+  Every serve-tier module that starts one must also join one (shutdown,
+  barrier, or watchdog path).
 """
 from __future__ import annotations
 
@@ -62,11 +74,24 @@ class SharedStateRule(ProjectRule):
         owners = _private_members(modules)
         findings = []
         for m in modules:
+            in_serve = "serve/" in m.relpath
+            thread_calls = []
+            joins = False
             for node in ast.walk(m.tree):
                 if isinstance(node, ast.Attribute):
                     findings.extend(self._private_access(m, node, owners))
+                    if node.attr == "join":
+                        joins = True
                 if isinstance(node, ast.Call):
                     findings.extend(self._bare_thread(m, node))
+                    if in_serve:
+                        findings.extend(self._unbounded_queue(m, node))
+                        name = astutil.call_name(node)
+                        if name and name.split(".")[-1] == "PropagatingThread":
+                            thread_calls.append(node)
+            if in_serve and not joins:
+                findings.extend(self._unjoined_thread(m, c)
+                                for c in thread_calls)
         return findings
 
     # R5a ------------------------------------------------------------------
@@ -95,3 +120,36 @@ class SharedStateRule(ProjectRule):
             "bare threading.Thread: exceptions in the target die with the "
             "thread and join() hides them — use "
             "repro.utils.PropagatingThread (re-raises on join)")
+
+    # R5c ------------------------------------------------------------------
+    _QUEUE_CLASSES = {"Queue", "LifoQueue", "PriorityQueue"}
+
+    def _unbounded_queue(self, module, call):
+        name = astutil.call_name(call)
+        if name is None or name.split(".")[-1] not in self._QUEUE_CLASSES:
+            return
+        maxsize = None
+        if call.args:
+            maxsize = call.args[0]
+        for kw in call.keywords:
+            if kw.arg == "maxsize":
+                maxsize = kw.value
+        if maxsize is not None:
+            # a non-constant bound is someone's budget — trust it; flag
+            # only a literal 0 (queue.Queue's "unbounded" spelling)
+            if not (isinstance(maxsize, ast.Constant) and maxsize.value == 0):
+                return
+        yield Finding(
+            self.id, module.path, call.lineno,
+            f"unbounded {name.split('.')[-1]} in a serve/ module: every "
+            f"host-side buffer in the serving tier is budgeted "
+            f"(BackpressureError past the bound) — pass a positive maxsize")
+
+    # R5d ------------------------------------------------------------------
+    def _unjoined_thread(self, module, call):
+        return Finding(
+            self.id, module.path, call.lineno,
+            "PropagatingThread started in a serve/ module that never calls "
+            ".join anywhere: the stored exception is only re-raised by "
+            "join(), so this thread fails as silently as a bare Thread — "
+            "join it on a shutdown/barrier/watchdog path")
